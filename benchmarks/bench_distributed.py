@@ -1,0 +1,109 @@
+"""Fig. 5, 6, 7: distributed scaling — FSS vs +RC vs +aRC, and the effect of
+multiple RC iterations, across processor counts (simulated SPMD lanes)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ColorConfig, RecolorConfig, arc_sim, color_graph_sim,
+                        colors_from_views, compute_order, ordering,
+                        partition_graph, recolor_iterations, recolor_sim,
+                        selection)
+
+from .common import emit, geomean, suite_real, suite_rmat
+
+
+def fss(g, P, mc, superstep=512):
+    """First Fit + Smallest Last + synchronous — the FSS baseline of [26]."""
+    pg = partition_graph(g, P)
+    order = compute_order(pg, ordering.SMALLEST_LAST)
+    cfg = ColorConfig(max_colors=mc, superstep=superstep,
+                      selection=selection.FIRST_FIT)
+    t0 = time.time()
+    view, stats = color_graph_sim(pg, order, cfg)
+    return pg, np.asarray(view), stats, time.time() - t0
+
+
+def fig5(fast: bool = True):
+    """Real-world graphs: normalized colors+time vs P for FSS / +RC / +aRC."""
+    graphs = suite_real(fast)
+    Ps = (1, 2, 4, 8, 16) if fast else (1, 2, 4, 8, 16, 32, 64)
+    base: dict = {}
+    for gname, g in graphs.items():
+        _, _, st1, t1 = fss(g, 1, 1024)
+        base[gname] = (st1["n_colors"], max(t1, 1e-9))
+    for P in Ps:
+        rows = {"fss": [], "rc": [], "arc": []}
+        times = {"fss": [], "rc": [], "arc": []}
+        for gname, g in graphs.items():
+            pg, view, st, t = fss(g, P, 1024)
+            rows["fss"].append(st["n_colors"] / base[gname][0])
+            times["fss"].append(t / base[gname][1])
+            t0 = time.time()
+            _, rst = recolor_sim(pg, view, "nd", RecolorConfig(max_colors=1024))
+            rows["rc"].append(rst["n_colors"] / base[gname][0])
+            times["rc"].append((t + time.time() - t0) / base[gname][1])
+            t0 = time.time()
+            _, ast = arc_sim(pg, view, "nd", RecolorConfig(max_colors=1024),
+                             ColorConfig(max_colors=1024, superstep=512))
+            rows["arc"].append(ast["n_colors"] / base[gname][0])
+            times["arc"].append((t + time.time() - t0) / base[gname][1])
+        for k in rows:
+            emit(f"fig5/P{P}/{k.upper()}", 0.0,
+                 f"norm_colors={geomean(rows[k]):.3f};"
+                 f"norm_time={geomean(times[k]):.3f}")
+
+
+def fig6(fast: bool = True):
+    """RMAT graphs: FSS vs +RC vs +aRC colors per graph (conflict-heavy)."""
+    graphs = suite_rmat(fast)
+    Ps = (4, 16) if fast else (4, 16, 64)
+    for gname, g in graphs.items():
+        mc = 4096 if "bad" in gname else 1024
+        for P in Ps:
+            pg, view, st, t = fss(g, P, mc)
+            _, rst = recolor_sim(pg, view, "nd", RecolorConfig(max_colors=mc))
+            _, ast = arc_sim(pg, view, "nd", RecolorConfig(max_colors=mc),
+                             ColorConfig(max_colors=mc, superstep=512))
+            emit(f"fig6/{gname}/P{P}", t * 1e6,
+                 f"FSS={st['n_colors']};RC={rst['n_colors']};"
+                 f"aRC={ast['n_colors']};rounds={st['n_rounds']}")
+
+
+def fig7(fast: bool = True):
+    """Multiple RC iterations at scale vs sequential LF/SL references."""
+    graphs = suite_real(fast)
+    P = 16 if fast else 64
+    iters = 10
+    for gname, g in graphs.items():
+        pg1 = partition_graph(g, 1)
+        lf, _ = _seq(g, ordering.LARGEST_FIRST)
+        sl, _ = _seq(g, ordering.SMALLEST_LAST)
+        pg, view, st, _ = fss(g, P, 1024)
+        _, hist = recolor_iterations(pg, view, iters,
+                                     RecolorConfig(max_colors=1024),
+                                     base_perm="nd")
+        cs = [h["n_colors"] for h in hist]
+        emit(f"fig7/{gname}/P{P}", 0.0,
+             f"FSS={st['n_colors']};RC1={cs[0]};RC10={cs[-1]};"
+             f"seqLF={lf};seqSL={sl}")
+
+
+def _seq(g, kind):
+    pg = partition_graph(g, 1)
+    order = compute_order(pg, kind)
+    view, stats = color_graph_sim(pg, order,
+                                  ColorConfig(max_colors=1024,
+                                              superstep=4096))
+    return stats["n_colors"], view
+
+
+def run(fast: bool = True):
+    fig5(fast)
+    fig6(fast)
+    fig7(fast)
+
+
+if __name__ == "__main__":
+    run()

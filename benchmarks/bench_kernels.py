@@ -1,0 +1,58 @@
+"""Color-selection kernel benchmarks: jnp oracle timing (the CPU-executable
+path) + Pallas interpret-mode validation sweep. On real TPU hardware the
+pallas_call path replaces the oracle; interpret mode here only proves
+correctness, its wall time is not meaningful."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def run(fast: bool = True):
+    rng = np.random.default_rng(0)
+    shapes = [(4096, 32, 256), (16384, 16, 512)] if fast else \
+        [(4096, 32, 256), (16384, 16, 512), (65536, 32, 1024)]
+    for (v, d, mc) in shapes:
+        nbr = rng.integers(0, mc, (v, d)).astype(np.int32)
+        active = np.ones(v, bool)
+        rand = rng.integers(0, 2**32, v, dtype=np.uint32)
+
+        ff = jax.jit(lambda n, a: ref.first_fit(n, a, mc))
+        ff(jnp.asarray(nbr), jnp.asarray(active)).block_until_ready()
+        t0 = time.time()
+        for _ in range(5):
+            ff(jnp.asarray(nbr), jnp.asarray(active)).block_until_ready()
+        t_ref = (time.time() - t0) / 5
+
+        # pallas interpret: correctness only
+        out_k = ops.color_select(nbr, active, rand, max_colors=mc, x=0)
+        out_r = ff(jnp.asarray(nbr), jnp.asarray(active))
+        match = bool((np.asarray(out_k) == np.asarray(out_r)).all())
+        emit(f"kernel/first_fit/v{v}_d{d}_mc{mc}", t_ref * 1e6,
+             f"oracle_us={t_ref*1e6:.0f};pallas_interpret_match={match};"
+             f"throughput_Mvtx_s={v/t_ref/1e6:.1f}")
+
+        rx = jax.jit(lambda n, a, r: ref.random_x(n, a, r, 10, mc))
+        rx(jnp.asarray(nbr), jnp.asarray(active),
+           jnp.asarray(rand)).block_until_ready()
+        t0 = time.time()
+        for _ in range(5):
+            rx(jnp.asarray(nbr), jnp.asarray(active),
+               jnp.asarray(rand)).block_until_ready()
+        t_ref = (time.time() - t0) / 5
+        out_k = ops.color_select(nbr, active, rand, max_colors=mc, x=10)
+        out_r = rx(jnp.asarray(nbr), jnp.asarray(active), jnp.asarray(rand))
+        match = bool((np.asarray(out_k) == np.asarray(out_r)).all())
+        emit(f"kernel/random_10/v{v}_d{d}_mc{mc}", t_ref * 1e6,
+             f"oracle_us={t_ref*1e6:.0f};pallas_interpret_match={match}")
+
+
+if __name__ == "__main__":
+    run()

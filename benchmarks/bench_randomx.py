@@ -1,0 +1,66 @@
+"""Fig. 8, 9, 10: Random-X Fit — initial quality/runtime trade-off, with
+0/1/2 ND recoloring iterations; derives the paper's "speed"/"quality" sets."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ColorConfig, RecolorConfig, color_graph_sim,
+                        compute_order, ordering, partition_graph,
+                        recolor_iterations, selection)
+
+from .common import emit, geomean, suite_real
+
+
+def combo(g, P, sel, x, okind, rc_iters, mc=1024, superstep=512):
+    pg = partition_graph(g, P)
+    order = compute_order(pg, okind)
+    cfg = ColorConfig(max_colors=mc, superstep=superstep, selection=sel,
+                      random_x=x)
+    t0 = time.time()
+    view, stats = color_graph_sim(pg, order, cfg)
+    if rc_iters:
+        view, hist = recolor_iterations(pg, np.asarray(view), rc_iters,
+                                        RecolorConfig(max_colors=mc),
+                                        base_perm="nd")
+        colors = hist[-1]["n_colors"]
+    else:
+        colors = stats["n_colors"]
+    return colors, time.time() - t0, stats
+
+
+def run(fast: bool = True, P: int = 8):
+    graphs = suite_real(fast)
+    combos = [
+        ("FI", selection.FIRST_FIT, 0, ordering.INTERNAL_FIRST),
+        ("FS", selection.FIRST_FIT, 0, ordering.SMALLEST_LAST),
+        ("R5I", selection.RANDOM_X, 5, ordering.INTERNAL_FIRST),
+        ("R10I", selection.RANDOM_X, 10, ordering.INTERNAL_FIRST),
+        ("R50I", selection.RANDOM_X, 50, ordering.INTERNAL_FIRST),
+        ("R10S", selection.RANDOM_X, 10, ordering.SMALLEST_LAST),
+    ]
+    # normalize against FI, 0 iterations
+    base: dict = {}
+    for gname, g in graphs.items():
+        c, t, _ = combo(g, P, selection.FIRST_FIT, 0,
+                        ordering.INTERNAL_FIRST, 0)
+        base[gname] = (c, max(t, 1e-9))
+    for rc in (0, 1, 2):
+        for cname, sel, x, okind in combos:
+            ncs, nts, rounds = [], [], []
+            for gname, g in graphs.items():
+                c, t, st = combo(g, P, sel, x, okind, rc)
+                ncs.append(c / base[gname][0])
+                nts.append(t / base[gname][1])
+                rounds.append(st["n_rounds"])
+            emit(f"fig8910/{cname}ND{rc}", 0.0,
+                 f"norm_colors={geomean(ncs):.3f};norm_time={geomean(nts):.3f};"
+                 f"rounds={max(rounds)}")
+    # paper presets
+    emit("presets/speed", 0.0, "combo=FIxxND0")
+    emit("presets/quality", 0.0, "combo=R(5-10)IxxND1")
+
+
+if __name__ == "__main__":
+    run()

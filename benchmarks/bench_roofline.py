@@ -1,0 +1,37 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell roofline table."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+DRYRUN_DIR = Path("experiments/dryrun_final")
+_FALLBACK = Path("experiments/dryrun")
+
+
+def run(fast: bool = True):
+    d = DRYRUN_DIR if DRYRUN_DIR.exists() else _FALLBACK
+    if not d.exists():
+        emit("roofline/missing", 0.0, "run python -m repro.launch.dryrun --all")
+        return []
+    rows = []
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        rows.append(rec)
+        mem = rec.get("memory_analysis", {}).get("total_per_device", 0)
+        emit(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dom={r['bottleneck']};compute_s={r['compute_s']:.4f};"
+             f"memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"useful_flops={rec.get('useful_flops_ratio', 0):.2f};"
+             f"mem_per_dev_GB={mem/1e9:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""Fig. 2 & 3: sequential recoloring — orderings × permutations × iterations,
+and color-class permutation randomness schedules (ND-RAND%x, ND-RAND%2^i)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ColorConfig, RecolorConfig, color_graph_sim,
+                        colors_from_views, compute_order, ordering,
+                        partition_graph, recolor_iterations)
+
+from .common import emit, geomean, suite_real
+
+
+def initial(g, kind):
+    pg = partition_graph(g, 1)
+    order = compute_order(pg, kind)
+    view, stats = color_graph_sim(
+        pg, order, ColorConfig(max_colors=1024, superstep=4096))
+    return pg, np.asarray(view), stats["n_colors"]
+
+
+def fig2(fast: bool = True, iters: int = 12):
+    """Orderings (NAT/LF/SL) × permutations (RV/NI/ND) over iterations,
+    normalized to NAT colors (as the paper aggregates)."""
+    graphs = suite_real(fast)
+    base = {}
+    results = {}
+    for gname, g in graphs.items():
+        pg, view_nat, nat0 = initial(g, ordering.NATURAL)
+        base[gname] = nat0
+        for okind in (ordering.NATURAL, ordering.LARGEST_FIRST,
+                      ordering.SMALLEST_LAST):
+            pg, view, c0 = initial(g, okind)
+            for perm in ("rv", "ni", "nd"):
+                t0 = time.time()
+                _, hist = recolor_iterations(
+                    pg, view, iters, RecolorConfig(max_colors=1024),
+                    base_perm=perm)
+                dt = time.time() - t0
+                key = (okind, perm)
+                results.setdefault(key, {})[gname] = dict(
+                    c0=c0 / nat0, cs=[h["n_colors"] / nat0 for h in hist],
+                    dt=dt)
+    for (okind, perm), per_g in results.items():
+        c0 = geomean(v["c0"] for v in per_g.values())
+        cend = geomean(v["cs"][-1] for v in per_g.values())
+        dt = sum(v["dt"] for v in per_g.values())
+        emit(f"fig2/{okind}+RC-{perm}", dt / max(iters, 1) * 1e6,
+             f"norm_colors_it0={c0:.3f};it{iters}={cend:.3f}")
+    return results
+
+
+def fig3(fast: bool = True, iters: int = 24, seeds: int = 3):
+    """Randomness schedules with NAT/LF/SL orderings (paper: NAT benefits,
+    LF/SL prefer pure ND at high iteration counts)."""
+    graphs = suite_real(fast)
+    schedules = {
+        "nd": dict(base_perm="nd"),
+        "rand": dict(base_perm="rand"),
+        "nd-rand%5": dict(base_perm="nd", rand_every=5),
+        "nd-rand%10": dict(base_perm="nd", rand_every=10),
+        "nd-rand%2^i": dict(base_perm="nd", rand_pow2=True),
+    }
+    out = {}
+    for okind in (ordering.NATURAL, ordering.SMALLEST_LAST):
+        for sname, kw in schedules.items():
+            finals = []
+            for gname, g in graphs.items():
+                pg, view, c0 = initial(g, okind)
+                _, nat0 = pg, c0
+                for s in range(seeds):
+                    _, hist = recolor_iterations(
+                        pg, view, iters, RecolorConfig(max_colors=1024),
+                        seed=s, **kw)
+                    finals.append(hist[-1]["n_colors"] / c0)
+            val = geomean(finals)
+            out[(okind, sname)] = val
+            emit(f"fig3/{okind}/{sname}", 0.0,
+                 f"final_norm_colors={val:.4f}")
+    return out
+
+
+def run(fast: bool = True):
+    fig2(fast)
+    fig3(fast, iters=12 if fast else 24, seeds=2 if fast else 3)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: scaled graph suite, timing, CSV."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import rmat
+
+# The paper's evaluation suite at CPU-feasible scale. "real" = FE-style
+# stand-ins for the UF/Parasol graphs (Table 1), "rmat" = Table 2.
+def suite_real(fast: bool = True):
+    if fast:
+        return {
+            "grid2d": rmat.grid2d(96, 96, 9),
+            "geo2d": rmat.geometric(8192, 28, seed=3),
+            "geo3d": rmat.geometric(6144, 36, seed=4, dims=3),
+        }
+    return {
+        "grid2d": rmat.grid2d(256, 256, 9),
+        "grid3d": rmat.grid3d(32, 32, 32),
+        "geo2d": rmat.geometric(1 << 15, 28, seed=3),
+        "geo3d": rmat.geometric(1 << 14, 36, seed=4, dims=3),
+    }
+
+
+def suite_rmat(fast: bool = True):
+    scale = 12 if fast else 14
+    return {
+        "rmat_er": rmat.rmat_er(scale, 8, seed=1),
+        "rmat_good": rmat.rmat_good(scale, 8, seed=1),
+        "rmat_bad": rmat.rmat_bad(scale, 8, seed=1),
+    }
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.time()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeat
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))

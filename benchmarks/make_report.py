@@ -1,0 +1,44 @@
+"""Regenerate the EXPERIMENTS.md §Roofline table from dry-run JSONs."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def table(dryrun_dir="experiments/dryrun_final", mesh="pod16x16"):
+    rows = []
+    for f in sorted(Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("arch") == "coloring" or rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append((rec["arch"], rec["shape"], "—", "—", "—", "—", "—",
+                         "—", "skipped: " + rec.get("reason", "")[:40]))
+            continue
+        if rec.get("status") != "ok":
+            rows.append((rec["arch"], rec["shape"], "ERR", "", "", "", "", "",
+                         rec.get("error", "")[:40]))
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory_analysis", {}).get("total_per_device", 0) / 1e9
+        rows.append((
+            rec["arch"], rec["shape"],
+            f"{r['compute_s']:.3f}", f"{r['memory_s']:.3f}",
+            f"{r['collective_s']:.3f}", r["bottleneck"],
+            f"{rec.get('useful_flops_ratio', 0):.2f}", f"{mem:.1f}",
+            "",
+        ))
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful | mem GB/dev | note |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for row in rows:
+        out.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+    d = sys.argv[2] if len(sys.argv) > 2 else "experiments/dryrun_final"
+    print(table(d, mesh))

@@ -1,0 +1,34 @@
+"""Coloring as a systems primitive: conflict-free microbatch scheduling.
+
+The paper's motivating use (§1): concurrent procedures must not touch the
+same resource. Here: a training batch whose samples update shared sparse
+embedding rows. Coloring the sample-conflict graph yields groups that can be
+applied in parallel without write conflicts — with far fewer groups (= sync
+barriers) than serial execution.
+
+Run:  PYTHONPATH=src python examples/coloring_sched.py
+"""
+import numpy as np
+
+from repro.data.coloring_sched import (conflict_graph, schedule,
+                                       validate_schedule)
+
+rng = np.random.default_rng(0)
+n_samples = 256
+# each sample touches 4 of 4096 embedding rows; 25% of samples additionally
+# hit one of 6 "hot" rows (the contention that forces serialization)
+rows = rng.integers(6, 4096, (n_samples, 4))
+hot = rng.random(n_samples) < 0.25
+rows[hot, 0] = rng.integers(0, 6, int(hot.sum()))
+
+g = conflict_graph(rows, n_samples)
+print(f"conflict graph: {n_samples} samples, {g.m} conflicting pairs, "
+      f"maxdeg={g.max_degree}")
+
+groups, n_groups, log = schedule(rows, n_samples, n_workers=4)
+assert validate_schedule(rows, groups)
+sizes = [len(gr) for gr in groups]
+print(f"schedule: {n_groups} conflict-free groups "
+      f"(vs {n_samples} fully-serial steps) — sizes {sizes}")
+print(f"parallel speedup bound: {n_samples / n_groups:.1f}x, "
+      f"largest group {max(sizes)} samples")

@@ -1,0 +1,40 @@
+"""Quickstart: distributed graph coloring with iterative recoloring.
+
+Colors an RMAT graph on 8 (simulated) processors, then improves the coloring
+with ND recoloring iterations — the paper's core loop in ~30 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (ColorConfig, RecolorConfig, check_coloring,
+                        color_graph_sim, colors_from_views, compute_order,
+                        ordering, partition_graph, recolor_iterations, rmat)
+
+# 1. a graph (16k vertices, power-law degrees) partitioned over 8 workers
+g = rmat.rmat_good(14, 8, seed=1)
+pg = partition_graph(g, P=8)
+print(f"graph: |V|={g.n:,} |E|={g.m:,} maxdeg={g.max_degree}")
+
+# 2. speculative greedy coloring (Bozdağ framework): supersteps + conflict
+#    resolution rounds, First Fit selection, Smallest Last local ordering
+order = compute_order(pg, ordering.SMALLEST_LAST)
+cfg = ColorConfig(max_colors=1024, superstep=512)
+view, stats = color_graph_sim(pg, order, cfg)
+colors = colors_from_views(pg, np.asarray(view))
+print(f"initial: {stats['n_colors']} colors in {stats['n_rounds']} rounds "
+      f"({stats['n_exchanges']} boundary exchanges), "
+      f"valid={check_coloring(g, colors)['valid']}")
+
+# 3. iterative recoloring (the paper's contribution): each iteration colors
+#    whole color classes in parallel — conflict-free by construction — with
+#    piggybacked (coalesced) boundary exchanges
+view, hist = recolor_iterations(pg, np.asarray(view), n_iters=5,
+                                cfg=RecolorConfig(max_colors=1024),
+                                base_perm="nd")
+for h in hist:
+    print(f"  RC iter {h['iteration']} ({h['perm']}): {h['n_colors']} colors, "
+          f"{h['n_exchanges']}/{h['n_steps']} exchanges executed")
+colors = colors_from_views(pg, np.asarray(view))
+final = check_coloring(g, colors)
+print(f"final: {final['n_colors']} colors, valid={final['valid']}")

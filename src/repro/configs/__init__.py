@@ -1,0 +1,9 @@
+"""Architecture configs (one per assigned architecture) + sharding plans."""
+from . import archs  # noqa: F401  — populates the registry
+from .base import (SHAPES, ArchConfig, ShapeConfig, ShardingPlan, get_arch,
+                   list_archs, plan_for_mesh, shape_applicable, NO_SHARDING)
+from .archs import smoke_of
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeConfig", "ShardingPlan", "get_arch",
+           "list_archs", "plan_for_mesh", "shape_applicable", "smoke_of",
+           "NO_SHARDING"]

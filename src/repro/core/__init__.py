@@ -1,0 +1,32 @@
+"""Distributed graph coloring with iterative recoloring — core library.
+
+Public API:
+  Graph, PartitionedGraph, partition_graph      — graph substrate
+  compute_order                                  — vertex-visit orderings
+  ColorConfig, color_graph_sim/_sharded          — speculative coloring
+  RecolorConfig, recolor_sim/_sharded, arc_sim   — iterative recoloring
+  recolor_iterations, schedule_for_iteration     — ND-RAND%x schedules
+  message_stats                                  — piggybacking accounting
+  presets.speed / presets.quality                — the paper's parameter sets
+"""
+from . import ordering, presets, rmat, selection
+from .comm import AXIS, AxisComm
+from .graph import Graph, PartitionedGraph, partition_graph
+from .ordering import compute_order
+from .piggyback import MessageStats, message_stats
+from .recolor import (ND, NI, RAND, RV, RecolorConfig, arc_sim,
+                      recolor_iterations, recolor_sharded, recolor_sim,
+                      schedule_for_iteration)
+from .speculative import (ColorConfig, color_graph_sharded, color_graph_sim,
+                          color_spmd)
+from .validate import assert_valid, check_coloring, colors_from_views
+
+__all__ = [
+    "AXIS", "AxisComm", "ColorConfig", "Graph", "MessageStats", "ND", "NI",
+    "PartitionedGraph", "RAND", "RV", "RecolorConfig", "arc_sim",
+    "assert_valid", "check_coloring", "color_graph_sharded", "color_graph_sim",
+    "color_spmd", "colors_from_views", "compute_order", "message_stats",
+    "ordering", "partition_graph", "presets", "recolor_iterations",
+    "recolor_sharded", "recolor_sim", "rmat", "schedule_for_iteration",
+    "selection",
+]

@@ -1,0 +1,248 @@
+"""Host-side graph substrate: global CSR + distributed partitioning.
+
+The distributed layout mirrors the paper (§2.2): each processor owns a
+contiguous block of vertices (block partitioning, as the paper uses for the
+RMAT graphs); for every cross-partition edge both endpoints' processors know
+the edge. Vertices whose neighbours are all local are *internal*; the rest are
+*boundary*. Remote neighbours appear locally as *ghost* slots.
+
+Device layout (per processor p, padded to common maxima so the arrays stack
+into a leading-P axis for `SimComm`/`shard_map`):
+
+  view slots  = [0, n_local_max)                local vertices
+              | [n_local_max, n_local_max+g)    ghosts (stale remote colors)
+              | sentinel slot (always color 0)  at index n_slots-1
+
+  ``indices`` holds slot ids; padded entries point at the sentinel.
+  ``boundary`` lists local boundary slots; the *exchange payload* of processor
+  p is ``view[boundary]`` — only boundary colors ever travel, the TPU analogue
+  of the paper's neighbour-to-neighbour boundary messages.
+  Ghost g of processor p is owned by ``ghost_owner[g]`` and lives at position
+  ``ghost_slot[g]`` of that owner's payload, so after an all-gather of
+  payloads P×max_b, ghosts refresh with one gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Global symmetric CSR graph (host, numpy)."""
+
+    n: int
+    indptr: np.ndarray  # (n+1,) int64
+    indices: np.ndarray  # (2m,) int32
+
+    @property
+    def m_directed(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def m(self) -> int:
+        return self.m_directed // 2
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max(initial=0))
+
+    def validate_coloring(self, colors: np.ndarray) -> bool:
+        """True iff `colors` (1-based, 0=uncolored disallowed) is proper."""
+        if (colors <= 0).any():
+            return False
+        src = np.repeat(np.arange(self.n), self.degrees)
+        return bool((colors[src] != colors[self.indices]).all())
+
+    def num_colors(self, colors: np.ndarray) -> int:
+        return int(colors.max(initial=0))
+
+
+def _pad2(rows: list[np.ndarray], width: int, fill: int) -> np.ndarray:
+    out = np.full((len(rows), width), fill, dtype=np.int32)
+    for i, r in enumerate(rows):
+        out[i, : len(r)] = r
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraph:
+    """Per-processor padded arrays, stacked on a leading P axis (host, numpy).
+
+    All index arrays are int32. `n_slots = n_local_max + max_ghost + 1`.
+    """
+
+    P: int
+    n_global: int
+    n_local_max: int
+    max_ghost: int
+    max_boundary: int
+    m_local_max: int
+    offs: np.ndarray           # (P+1,) block boundaries in global ids
+    n_local: np.ndarray        # (P,)
+    n_ghost: np.ndarray        # (P,)
+    n_boundary: np.ndarray     # (P,)
+    indptr: np.ndarray         # (P, n_local_max+1)
+    indices: np.ndarray        # (P, m_local_max) slot ids, pad=sentinel
+    edge_src: np.ndarray       # (P, m_local_max) local row per edge, pad=n_local_max
+    boundary: np.ndarray       # (P, max_boundary) local slots, pad=sentinel
+    ghost_owner: np.ndarray    # (P, max_ghost)
+    ghost_slot: np.ndarray     # (P, max_ghost)
+    gvid: np.ndarray           # (P, n_slots) global vertex id per slot, pad=-1
+    prio: np.ndarray           # (P, n_slots) random tie-break priority, pad=-1
+    is_internal: np.ndarray    # (P, n_local_max) bool
+    degree: np.ndarray         # (P, n_local_max) int32 local-graph-visible degree
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_local_max + self.max_ghost + 1
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_slots - 1
+
+    def arrays(self) -> dict[str, np.ndarray]:
+        """Device-ready dict (everything that the JAX kernels consume)."""
+        return dict(
+            n_local=self.n_local.astype(np.int32),
+            indptr=self.indptr,
+            indices=self.indices,
+            edge_src=self.edge_src,
+            boundary=self.boundary,
+            ghost_owner=self.ghost_owner,
+            ghost_slot=self.ghost_slot,
+            prio=self.prio,
+            is_internal=self.is_internal,
+            degree=self.degree,
+        )
+
+    def gather_global_colors(self, local_colors: np.ndarray) -> np.ndarray:
+        """(P, n_slots) or (P, n_local_max) device views -> (n_global,) colors."""
+        out = np.zeros(self.n_global, dtype=local_colors.dtype)
+        for p in range(self.P):
+            nl = int(self.n_local[p])
+            out[self.offs[p] : self.offs[p] + nl] = local_colors[p, :nl]
+        return out
+
+
+def partition_graph(g: Graph, P: int, *, seed: int = 0,
+                    permute: bool = False) -> PartitionedGraph:
+    """Block-partition `g` onto P processors and build the device layout.
+
+    ``permute=True`` applies a random vertex permutation first (a stand-in for
+    a different partitioner; block partitioning on RMAT matches the paper).
+    """
+    rng = np.random.default_rng(seed)
+    if permute:
+        perm = rng.permutation(g.n).astype(np.int32)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(g.n, dtype=np.int32)
+        deg = g.degrees
+        new_indptr = np.zeros(g.n + 1, dtype=np.int64)
+        new_indptr[1:] = np.cumsum(deg[perm])
+        new_indices = np.empty_like(g.indices)
+        for new_v in range(g.n):  # pragma: no cover - only used in slow paths
+            old_v = perm[new_v]
+            s, e = g.indptr[old_v], g.indptr[old_v + 1]
+            new_indices[new_indptr[new_v] : new_indptr[new_v + 1]] = inv[g.indices[s:e]]
+        g = Graph(g.n, new_indptr, new_indices)
+
+    offs = np.linspace(0, g.n, P + 1).astype(np.int64)
+    owner_of = np.searchsorted(offs, np.arange(g.n), side="right") - 1
+    prio_global = rng.permutation(g.n).astype(np.int32)  # random total order (§2.2)
+
+    n_local = (offs[1:] - offs[:-1]).astype(np.int32)
+    n_local_max = int(n_local.max())
+
+    rows_indptr, rows_indices, rows_src = [], [], []
+    rows_boundary, rows_gowner, rows_gslot = [], [], []
+    rows_gvid, rows_prio, rows_internal, rows_degree = [], [], [], []
+    n_ghost = np.zeros(P, dtype=np.int32)
+    n_boundary = np.zeros(P, dtype=np.int32)
+
+    for p in range(P):
+        lo, hi = int(offs[p]), int(offs[p + 1])
+        nl = hi - lo
+        s, e = g.indptr[lo], g.indptr[hi]
+        nbrs = g.indices[s:e]
+        row = np.repeat(np.arange(nl, dtype=np.int32),
+                        np.diff(g.indptr[lo : hi + 1]).astype(np.int32))
+        remote = (nbrs < lo) | (nbrs >= hi)
+        # ghosts: unique remote neighbours (searchsorted keeps this vectorized)
+        gh = np.unique(nbrs[remote])
+        slots = np.where(remote, 0, nbrs - lo).astype(np.int32)
+        if remote.any():
+            slots[remote] = (n_local_max
+                             + np.searchsorted(gh, nbrs[remote])).astype(
+                                 np.int32)
+        # boundary = local vertices with >=1 remote neighbour
+        is_bnd = np.zeros(nl, dtype=bool)
+        np.logical_or.at(is_bnd, row[remote], True)
+        bnd = np.nonzero(is_bnd)[0].astype(np.int32)
+        n_boundary[p] = len(bnd)
+        n_ghost[p] = len(gh)
+
+        rows_indptr.append(np.diff(g.indptr[lo : hi + 1]).astype(np.int32))
+        rows_indices.append(slots)
+        rows_src.append(row)
+        rows_boundary.append(bnd)
+        gowner = owner_of[gh].astype(np.int32) if len(gh) else np.zeros(0, np.int32)
+        rows_gowner.append(gowner)
+        rows_gvid.append((gh, lo, nl))
+        rows_internal.append(~is_bnd)
+        rows_degree.append(np.diff(g.indptr[lo : hi + 1]).astype(np.int32))
+        rows_gslot.append(gh)  # resolved below once all boundary lists exist
+
+    # Resolve ghost -> (owner, slot-in-owner-boundary-payload) via one global
+    # boundary-slot table (vectorized; P=512 × millions of edges stays fast).
+    bslot_global = np.full(g.n, -1, dtype=np.int32)
+    for p in range(P):
+        lo = int(offs[p])
+        bslot_global[rows_boundary[p] + lo] = np.arange(
+            len(rows_boundary[p]), dtype=np.int32)
+    gslot_rows = [bslot_global[gh] for gh in rows_gslot]
+
+    max_ghost = max(1, int(n_ghost.max()))
+    max_boundary = max(1, int(n_boundary.max()))
+    m_local_max = max(1, max(len(r) for r in rows_indices))
+    n_slots = n_local_max + max_ghost + 1
+    sentinel = n_slots - 1
+
+    indptr = np.zeros((P, n_local_max + 1), dtype=np.int32)
+    gvid = np.full((P, n_slots), -1, dtype=np.int32)
+    prio = np.full((P, n_slots), -1, dtype=np.int32)
+    is_internal = np.zeros((P, n_local_max), dtype=bool)
+    degree = np.zeros((P, n_local_max), dtype=np.int32)
+    for p in range(P):
+        nl = int(n_local[p])
+        indptr[p, 1 : nl + 1] = np.cumsum(rows_indptr[p])
+        indptr[p, nl + 1 :] = indptr[p, nl]
+        gh, lo, _ = rows_gvid[p]
+        gvid[p, :nl] = np.arange(lo, lo + nl, dtype=np.int32)
+        gvid[p, n_local_max : n_local_max + len(gh)] = gh
+        prio[p, :nl] = prio_global[lo : lo + nl]
+        prio[p, n_local_max : n_local_max + len(gh)] = prio_global[gh]
+        is_internal[p, :nl] = rows_internal[p]
+        degree[p, :nl] = rows_degree[p]
+
+    # remap ghost slot-ids in `indices` (they were built against per-p ghost
+    # numbering which already starts at n_local_max) and pad
+    indices = _pad2(rows_indices, m_local_max, sentinel)
+    edge_src = _pad2(rows_src, m_local_max, n_local_max)
+    boundary = _pad2(rows_boundary, max_boundary, sentinel)
+    ghost_owner = _pad2(rows_gowner, max_ghost, 0)
+    ghost_slot = _pad2(gslot_rows, max_ghost, 0)
+
+    return PartitionedGraph(
+        P=P, n_global=g.n, n_local_max=n_local_max, max_ghost=max_ghost,
+        max_boundary=max_boundary, m_local_max=m_local_max, offs=offs,
+        n_local=n_local, n_ghost=n_ghost, n_boundary=n_boundary,
+        indptr=indptr, indices=indices, edge_src=edge_src, boundary=boundary,
+        ghost_owner=ghost_owner, ghost_slot=ghost_slot, gvid=gvid, prio=prio,
+        is_internal=is_internal, degree=degree,
+    )

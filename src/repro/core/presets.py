@@ -1,0 +1,60 @@
+"""The paper's two recommended parameter sets (§4.3, §5).
+
+  "speed"   — FIxxND0: First Fit, Internal-First ordering, no recoloring.
+  "quality" — R(5–10)IxxND1: Random-X Fit (X=5..10), Internal-First ordering,
+              one (or more) ND recoloring iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import ordering, selection
+from .recolor import ND, RecolorConfig
+from .speculative import ColorConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    name: str
+    ordering: str
+    color_cfg: ColorConfig
+    recolor_iters: int
+    recolor_perm: str = ND
+
+
+def speed(max_colors: int = 1024, superstep: int = 512) -> Preset:
+    return Preset(
+        name="speed", ordering=ordering.INTERNAL_FIRST,
+        color_cfg=ColorConfig(max_colors=max_colors, superstep=superstep,
+                              selection=selection.FIRST_FIT),
+        recolor_iters=0,
+    )
+
+
+def quality(x: int = 10, max_colors: int = 1024, superstep: int = 512,
+            iters: int = 1) -> Preset:
+    return Preset(
+        name="quality", ordering=ordering.INTERNAL_FIRST,
+        color_cfg=ColorConfig(max_colors=max_colors, superstep=superstep,
+                              selection=selection.RANDOM_X, random_x=x),
+        recolor_iters=iters,
+    )
+
+
+def run_preset(pg, preset: Preset, seed: int = 0):
+    """Initial coloring + recoloring per the preset; returns (view, log)."""
+    from . import ordering as ord_mod
+    from .recolor import recolor_iterations
+    from .speculative import color_graph_sim
+
+    order = ord_mod.compute_order(pg, preset.ordering)
+    cfg = dataclasses.replace(preset.color_cfg, seed=seed)
+    view, stats = color_graph_sim(pg, order, cfg)
+    log = [dict(stage="initial", **stats)]
+    if preset.recolor_iters:
+        rcfg = RecolorConfig(max_colors=cfg.max_colors, seed=seed)
+        view, hist = recolor_iterations(pg, view, preset.recolor_iters, rcfg,
+                                        base_perm=preset.recolor_perm,
+                                        seed=seed)
+        log += [dict(stage="recolor", **h) for h in hist]
+    return view, log

@@ -1,0 +1,274 @@
+"""Distributed iterative recoloring (paper §3) — the core contribution.
+
+Synchronous recoloring (RC): given a valid K-coloring, recolor in K steps.
+Step ``t`` first-fit-colors the whole color class ``perm(t)`` — an independent
+set, so the step is *fully data-parallel* (vectorized over the class on TPU,
+no intra-step ordering) and the procedure is conflict-free by construction;
+distributed RC equals sequential RC for the same seed coloring (§3, tested).
+
+Color-class permutations (§3): RV (reverse), NI (non-increasing class size),
+ND (non-decreasing — the paper's best), RAND (Knuth shuffle), and the hybrid
+schedules ND-RAND%x / ND-RAND%2^i handled by `recolor_iterations`.
+
+Piggybacking (§3.1) becomes *exchange-step coalescing* on TPU: a ghost color
+assigned at step s is only needed by a local reader at step t>s, so the
+boundary all-gather after step s can be deferred to step t-1; everything
+pending rides that one collective ("piggybacks"). The pre-communication of
+the paper — "who receives at which step" — is the OR-reduce (pmax) of each
+shard's needed-step bitmap. `needed[K]` is the end-of-iteration exchange that
+carries all remaining deferred colors.
+
+Asynchronous recoloring (aRC, §3): each shard *locally* orders vertices by
+color class and reruns the speculative framework (conflicts possible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+
+from .comm import AXIS, AxisComm, exchange_boundary, run_sharded, run_sim
+from .graph import PartitionedGraph
+from .speculative import ColorConfig, _compact_order, color_spmd
+
+RV = "rv"
+NI = "ni"
+ND = "nd"
+RAND = "rand"
+ALL_PERMS = (RV, NI, ND, RAND)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecolorConfig:
+    """Static configuration of one recoloring iteration."""
+
+    max_colors: int = 1024         # bound on colors of the SEED coloring
+    piggyback: bool = True         # paper §3.1 (False = exchange every step)
+    wire16: bool = False           # int16 boundary payloads (half ICI bytes)
+    seed: int = 0
+
+    @property
+    def n_words(self) -> int:
+        return self.max_colors // 32
+
+
+def class_sizes(view, n_local, n_local_max, max_colors, comm: AxisComm):
+    """Global color-class sizes (max_colors,) — the NI/ND pre-communication."""
+    valid = jnp.arange(n_local_max) < n_local
+    idx = jnp.where(valid, view[:n_local_max], 0)
+    local = jnp.zeros((max_colors,), jnp.int32).at[idx].add(
+        valid.astype(jnp.int32))
+    local = local.at[0].set(0)
+    return comm.psum(local)
+
+
+def permutation_rank(sizes, kind: str, key) -> jnp.ndarray:
+    """rank[c] = recoloring step (1-based) of color class c; 0 for class 0.
+
+    Empty classes sort to the back (their steps are no-ops past K).
+    """
+    mc = sizes.shape[0]
+    colors = jnp.arange(mc, dtype=jnp.int32)
+    present = (sizes > 0) & (colors > 0)
+    big = jnp.iinfo(jnp.int32).max
+    if kind == RV:
+        key_v = jnp.where(present, -colors, big)
+    elif kind == NI:
+        key_v = jnp.where(present, -sizes, big)
+    elif kind == ND:
+        key_v = jnp.where(present, sizes, big)
+    elif kind == RAND:
+        r = jax.random.permutation(key, mc).astype(jnp.int32)
+        key_v = jnp.where(present, r, big)
+    else:
+        raise ValueError(f"unknown permutation {kind!r}")
+    # lexsort: primary = key_v, tie-break = color id (stable, overflow-free)
+    order = jnp.lexsort((colors, key_v))             # colors by visit step
+    rank = jnp.zeros((mc,), jnp.int32).at[order].set(
+        jnp.arange(1, mc + 1, dtype=jnp.int32))
+    return jnp.where(present, rank, 0).astype(jnp.int32)
+
+
+def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
+                      comm: AxisComm, piggyback: bool):
+    """The piggybacking schedule: needed[t] = all-gather after step t.
+
+    For every cross edge whose reader (local, step s_v) depends on a writer
+    (ghost, step s_u < s_v), an exchange must happen in [s_u, s_v-1]; the
+    just-in-time choice is s_v - 1, letting every pending color piggyback.
+    Entry K is the end-of-iteration exchange (always on).
+    """
+    src, dst = arrs["edge_src"], arrs["indices"]
+    step_rows = jnp.concatenate(
+        [step_of[:n_local_max], jnp.zeros((1,), step_of.dtype)])
+    s_v = step_rows[src]
+    s_u = step_of[dst]
+    is_ghost = (dst >= n_local_max) & (dst < step_of.shape[0] - 1)
+    dep = is_ghost & (s_u > 0) & (s_v > s_u)
+    if piggyback:
+        idx = jnp.where(dep, s_v - 1, 0)
+        needed = jnp.zeros((max_colors + 1,), bool).at[idx].max(dep)
+        needed = needed.at[0].set(False)
+        needed = comm.pmax(needed)                   # pre-communication
+    else:
+        needed = jnp.arange(max_colors + 1) <= K     # exchange every step
+    needed = needed.at[max_colors].set(True)
+    return needed
+
+
+def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
+    """One synchronous recoloring iteration (per-shard SPMD).
+
+    `view` is a valid coloring (n_slots,) with fresh ghosts. Returns the new
+    view plus stats (colors, executed/possible exchanges).
+    """
+    comm = AxisComm()
+    n_local_max = arrs["indptr"].shape[0] - 1
+    n_slots = arrs["prio"].shape[0]
+    n_local = arrs["n_local"]
+    mc = cfg.max_colors
+
+    sizes = class_sizes(view, n_local, n_local_max, mc, comm)
+    K = jnp.max(jnp.where(sizes > 0, jnp.arange(mc), 0)).astype(jnp.int32)
+    n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
+    rank = permutation_rank(sizes, perm_kind, key)
+    step_of = rank[view]                              # (n_slots,) step per slot
+    step_of = step_of.at[n_slots - 1].set(0)          # sentinel
+
+    needed = _needed_exchanges(step_of, arrs, n_local_max, n_classes, mc,
+                               comm, cfg.piggyback)
+
+    exchange = partial(exchange_boundary, boundary=arrs["boundary"],
+                       ghost_owner=arrs["ghost_owner"],
+                       ghost_slot=arrs["ghost_slot"],
+                       n_local_max=n_local_max, comm=comm,
+                       wire_dtype=jnp.int16 if cfg.wire16 else None)
+
+    src, dst = arrs["edge_src"], arrs["indices"]
+    valid_local = jnp.arange(n_local_max) < n_local
+
+    def step_body(t, carry):
+        new_view, n_ex = carry
+        # forbidden occupancy from already-recolored neighbours (cols 0..mc-1)
+        occ = jnp.zeros((n_local_max + 1, mc), bool).at[src, new_view[dst]].max(True)
+        occ = occ[:n_local_max].at[:, 0].set(True)
+        first_free = jnp.argmin(occ, axis=1).astype(jnp.int32)  # first False
+        active = (step_of[:n_local_max] == t) & valid_local
+        new_local = jnp.where(active, first_free, new_view[:n_local_max])
+        new_view = jax.lax.dynamic_update_slice(
+            new_view, new_local.astype(new_view.dtype), (0,))
+        do_ex = needed[jnp.minimum(t, mc)] | (t == n_classes)
+        new_view = jax.lax.cond(do_ex, exchange, lambda v: v, new_view)
+        return new_view, n_ex + do_ex.astype(jnp.int32)
+
+    # rank values of present classes are contiguous 1..n_classes, so the step
+    # loop runs n_classes steps even when the seed coloring has holes.
+    new_view0 = jnp.zeros((n_slots,), jnp.int32)
+    new_view, n_ex = jax.lax.fori_loop(
+        1, n_classes + 1, step_body, (new_view0, jnp.int32(0)))
+
+    local_max = jnp.max(jnp.where(valid_local, new_view[:n_local_max], 0))
+    stats = dict(
+        n_colors=comm.pmax(local_max),
+        n_colors_before=n_classes,
+        n_exchanges=n_ex,
+        n_steps=n_classes,
+    )
+    return new_view, stats
+
+
+def arc_order_spmd(view, n_local, n_local_max, rank):
+    """aRC visit order: local slots sorted by (class step, slot) — per shard."""
+    step_loc = rank[view[:n_local_max]]
+    valid = jnp.arange(n_local_max) < n_local
+    big = jnp.iinfo(jnp.int32).max
+    key_v = jnp.where(valid, step_loc, big)
+    slots = jnp.lexsort((jnp.arange(n_local_max, dtype=jnp.int32),
+                         key_v)).astype(jnp.int32)
+    return jnp.where(key_v[slots] < big, slots, -1)
+
+
+def arc_spmd(arrs, view, key, perm_kind: str, rc_cfg: RecolorConfig,
+             sp_cfg: ColorConfig):
+    """One asynchronous recoloring iteration: local class order + speculative."""
+    comm = AxisComm()
+    n_local_max = arrs["indptr"].shape[0] - 1
+    mc = rc_cfg.max_colors
+    sizes = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
+    rank = permutation_rank(sizes, perm_kind, key)
+    order = arc_order_spmd(view, arrs["n_local"], n_local_max, rank)
+    return color_spmd(arrs, order, key, sp_cfg)
+
+
+# ----------------------------------------------------------------- drivers --
+
+@lru_cache(maxsize=64)
+def _rc_sim_fn(P, perm_kind, cfg):
+    fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg)
+    return jax.jit(lambda arrs, view, key: run_sim(fn, P, (arrs, view), (key,)))
+
+
+def recolor_sim(pg: PartitionedGraph, view, perm_kind: str,
+                cfg: RecolorConfig, key=None):
+    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    new_view, stats = _rc_sim_fn(pg.P, perm_kind, cfg)(arrs, jnp.asarray(view), key)
+    return new_view, {k: int(v[0]) for k, v in stats.items()}
+
+
+@lru_cache(maxsize=64)
+def _arc_sim_fn(P, perm_kind, rc_cfg, sp_cfg):
+    fn = partial(arc_spmd, perm_kind=perm_kind, rc_cfg=rc_cfg, sp_cfg=sp_cfg)
+    return jax.jit(lambda arrs, view, key: run_sim(fn, P, (arrs, view), (key,)))
+
+
+def arc_sim(pg: PartitionedGraph, view, perm_kind: str, rc_cfg: RecolorConfig,
+            sp_cfg: ColorConfig, key=None):
+    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    if key is None:
+        key = jax.random.key(rc_cfg.seed)
+    new_view, stats = _arc_sim_fn(pg.P, perm_kind, rc_cfg, sp_cfg)(
+        arrs, jnp.asarray(view), key)
+    return new_view, {k: int(v[0]) for k, v in stats.items()}
+
+
+def recolor_sharded(pg: PartitionedGraph, view, perm_kind: str,
+                    cfg: RecolorConfig, mesh, key=None):
+    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg)
+    new_view, stats = jax.jit(
+        lambda a, v, k: run_sharded(fn, mesh, (a, v), (k,)))(
+            arrs, jnp.asarray(view), key)
+    return new_view, {k: int(jnp.max(v)) for k, v in stats.items()}
+
+
+def schedule_for_iteration(it: int, base: str = ND, rand_every: int = 0,
+                           rand_pow2: bool = False) -> str:
+    """Permutation for iteration `it` (1-based): ND-RAND%x / ND-RAND%2^i."""
+    if rand_pow2:
+        return RAND if it & (it - 1) == 0 and it > 1 else base
+    if rand_every and it % rand_every == 0:
+        return RAND
+    return base
+
+
+def recolor_iterations(pg: PartitionedGraph, view, n_iters: int,
+                       cfg: RecolorConfig, *, base_perm: str = ND,
+                       rand_every: int = 0, rand_pow2: bool = False,
+                       seed: int = 0, collect=None):
+    """Run `n_iters` RC iterations with an ND-RAND%x style schedule (sim)."""
+    history = []
+    for it in range(1, n_iters + 1):
+        kind = schedule_for_iteration(it, base_perm, rand_every, rand_pow2)
+        key = jax.random.fold_in(jax.random.key(seed), it)
+        view, stats = recolor_sim(pg, view, kind, cfg, key)
+        stats["iteration"], stats["perm"] = it, kind
+        history.append(stats)
+        if collect is not None:
+            collect(view, stats)
+    return view, history

@@ -1,0 +1,108 @@
+"""Color-selection strategies (paper §2.1, §3.2).
+
+A vertex's permissible set is represented as a forbidden *bitset*: ``words``
+of dtype uint32, ``max_colors // 32`` of them; bit ``c`` set means color ``c``
+is taken by a neighbour. Bit 0 is always set (colors are 1-based), so
+find-first-zero directly yields the First Fit color.
+
+Strategies:
+  FIRST_FIT      — smallest permissible color (Alg. 1).
+  STAGGERED      — First Fit starting from a per-processor offset, wrapping
+                   (Bozdağ et al.'s Staggered First Fit).
+  LEAST_USED     — locally least-used permissible color.
+  RANDOM_X       — uniform among the X smallest permissible colors
+                   (Gebremedhin et al.; the paper's §3.2 initial coloring).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FIRST_FIT = "first_fit"
+STAGGERED = "staggered"
+LEAST_USED = "least_used"
+RANDOM_X = "random_x"
+
+UINT1 = jnp.uint32(1)
+
+
+def set_bit(words: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Set bit `c` (int32 scalar in [0, 32*W)) in the word array."""
+    w = c >> 5
+    bit = UINT1 << (c & 31).astype(jnp.uint32)
+    return words.at[w].set(words[w] | bit)
+
+
+def find_first_zero(words: jnp.ndarray) -> jnp.ndarray:
+    """Index of the lowest zero bit; `32*W - 1` if the set is full."""
+    free = ~words
+    W = words.shape[0]
+    has = free != 0
+    widx = jnp.min(jnp.where(has, jnp.arange(W), W))
+    widx_c = jnp.minimum(widx, W - 1)
+    word = free[widx_c]
+    lsb = word & (~word + UINT1)
+    bit = jax.lax.population_count(lsb - UINT1).astype(jnp.int32)
+    out = widx_c.astype(jnp.int32) * 32 + bit
+    return jnp.where(widx >= W, 32 * W - 1, out)
+
+
+def _mask_below(words: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Return a copy of `words` with all bits < c additionally set."""
+    W = words.shape[0]
+    widx = c >> 5
+    rem = (c & 31).astype(jnp.uint32)
+    full = jnp.arange(W) < widx
+    partial_mask = jnp.where(jnp.arange(W) == widx,
+                             (UINT1 << rem) - UINT1, jnp.uint32(0))
+    return words | jnp.where(full, jnp.uint32(0xFFFFFFFF), 0).astype(
+        jnp.uint32) | partial_mask
+
+
+def first_fit(words):
+    return find_first_zero(words)
+
+
+def staggered(words, offset):
+    """First fit from `offset`, wrap to plain first fit if exhausted."""
+    c = find_first_zero(_mask_below(words, offset))
+    full = c >= words.shape[0] * 32 - 1
+    return jnp.where(full, find_first_zero(words), c)
+
+
+def least_used(words, usage):
+    """Least-used permissible *already-open* color; first fit if none is open.
+
+    Ties break to the smaller color. Restricting to already-used colors keeps
+    the strategy from opening a new color when an existing one is permissible
+    (the "(locally) least used color so far" of §2.1).
+    """
+    mc = usage.shape[0]
+    bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & UINT1
+    forbidden = bits.reshape(-1)[:mc].astype(bool)
+    big = jnp.iinfo(jnp.int32).max
+    key = jnp.where(forbidden | (usage == 0), big, usage)
+    best = jnp.lexsort((jnp.arange(mc, dtype=jnp.int32), key))[0]
+    none_open = key[best] == big
+    return jnp.where(none_open, find_first_zero(words),
+                     best.astype(jnp.int32))
+
+
+def random_x(words, x: int, rand_u32):
+    """Uniform choice among the `x` smallest permissible colors.
+
+    `x` is static; `rand_u32` is this vertex's per-round random draw.
+    """
+    def body(k, carry):
+        words, cands = carry
+        c = find_first_zero(words)
+        cands = cands.at[k].set(c)
+        return set_bit(words, c), cands
+
+    mc = words.shape[0] * 32
+    cands = jnp.full((x,), mc - 1, dtype=jnp.int32)
+    _, cands = jax.lax.fori_loop(0, x, body, (words, cands))
+    n_free = jnp.sum(cands < mc - 1).astype(jnp.uint32)
+    n_free = jnp.maximum(n_free, jnp.uint32(1))
+    idx = (rand_u32 % n_free).astype(jnp.int32)
+    return cands[idx]

@@ -1,0 +1,206 @@
+"""Speculative greedy distributed coloring (Bozdağ et al. framework, §2.2).
+
+Round structure (all inside one jitted SPMD function):
+
+  while conflicts remain:
+    compact uncolored vertices to the front of the visit order
+    for each superstep chunk of `superstep` vertices:
+        sequentially greedy-color the chunk (local view, possibly stale ghosts)
+        exchange boundary colors (every `exchange_every` supersteps; =1 is the
+        paper's synchronous variant, >1 models asynchronous staleness)
+    final boundary exchange
+    detect conflicts on boundary edges; the lower-priority endpoint is
+    uncolored and queued for the next round (random total order tie-break)
+
+Conflicts can only involve boundary vertices colored speculatively — exactly
+the paper's framework. The same function serves initial coloring (any order,
+any selection strategy incl. Random-X Fit) and the aRC second pass (order
+derived from a previous coloring's classes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+
+from . import selection as sel
+from .comm import AXIS, AxisComm, exchange_boundary, run_sharded, run_sim
+from .graph import PartitionedGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class ColorConfig:
+    """Static configuration of one distributed coloring run."""
+
+    max_colors: int = 1024
+    superstep: int = 512           # paper's superstep size (vertices per chunk)
+    selection: str = sel.FIRST_FIT
+    random_x: int = 10             # X for Random-X Fit
+    stagger_estimate: int = 64     # initial color estimate for Staggered FF
+    exchange_every: int = 1        # 1 = synchronous; k>1 = bounded staleness
+    max_rounds: int = 64
+    wire16: bool = False           # int16 boundary payloads (half ICI bytes)
+    seed: int = 0
+
+    @property
+    def n_words(self) -> int:
+        assert self.max_colors % 32 == 0
+        return self.max_colors // 32
+
+
+def _forbidden_words(view, indptr, indices, v, n_words):
+    """Bitset of neighbour colors of local vertex `v` under current view."""
+    words = jnp.zeros((n_words,), dtype=jnp.uint32).at[0].set(jnp.uint32(1))
+
+    def body(e, words):
+        return sel.set_bit(words, view[indices[e]])
+
+    return jax.lax.fori_loop(indptr[v], indptr[v + 1], body, words)
+
+
+def _pick_color(words, usage, v_rand, p_idx, cfg: ColorConfig):
+    if cfg.selection == sel.FIRST_FIT:
+        return sel.first_fit(words)
+    if cfg.selection == sel.STAGGERED:
+        offset = (p_idx * cfg.stagger_estimate) % cfg.max_colors
+        return sel.staggered(words, offset)
+    if cfg.selection == sel.LEAST_USED:
+        return sel.least_used(words, usage)
+    if cfg.selection == sel.RANDOM_X:
+        return sel.random_x(words, cfg.random_x, v_rand)
+    raise ValueError(f"unknown selection {cfg.selection!r}")
+
+
+def _greedy_chunk(view, usage, order, rand_u32, start, count, arrs, p_idx,
+                  cfg: ColorConfig):
+    """Sequentially color `order[start:start+count]` (the superstep body)."""
+    indptr, indices = arrs["indptr"], arrs["indices"]
+
+    def body(i, carry):
+        view, usage = carry
+        v = order[i]
+        v_safe = jnp.maximum(v, 0)
+        needs = (v >= 0) & (view[v_safe] == 0)
+
+        def color_one(args):
+            view, usage = args
+            words = _forbidden_words(view, indptr, indices, v_safe, cfg.n_words)
+            c = _pick_color(words, usage, rand_u32[v_safe], p_idx, cfg)
+            c = jnp.minimum(c, cfg.max_colors - 1).astype(jnp.int32)
+            return view.at[v_safe].set(c), usage.at[c].add(1)
+
+        return jax.lax.cond(needs, color_one, lambda a: a, (view, usage))
+
+    return jax.lax.fori_loop(start, start + count, body, (view, usage))
+
+
+def _detect_conflicts(view, arrs, n_local_max):
+    """Uncolor the lower-priority endpoint of every same-color edge."""
+    src, dst, prio = arrs["edge_src"], arrs["indices"], arrs["prio"]
+    view_rows = jnp.concatenate([view[:n_local_max], jnp.zeros((1,), view.dtype)])
+    prio_rows = jnp.concatenate(
+        [prio[:n_local_max], jnp.full((1,), -1, prio.dtype)])
+    c_src = view_rows[src]
+    c_dst = view[dst]
+    same = (c_src == c_dst) & (c_src > 0)
+    lose = same & (prio[dst] > prio_rows[src])
+    conf = jnp.zeros((n_local_max + 1,), bool).at[src].max(lose)[:n_local_max]
+    new_local = jnp.where(conf, 0, view[:n_local_max])
+    view = jax.lax.dynamic_update_slice(view, new_local.astype(view.dtype), (0,))
+    return view, jnp.sum(conf, dtype=jnp.int32)
+
+
+def _compact_order(order, view):
+    """Stable-move still-uncolored vertices to the front of the visit order."""
+    v_safe = jnp.maximum(order, 0)
+    needs = (order >= 0) & (view[v_safe] == 0)
+    perm = jnp.argsort(~needs, stable=True)
+    return order[perm], jnp.sum(needs, dtype=jnp.int32)
+
+
+def color_spmd(arrs, order, key, cfg: ColorConfig):
+    """Per-shard SPMD speculative coloring. Returns (view, stats dict)."""
+    comm = AxisComm()
+    n_local_max = arrs["indptr"].shape[0] - 1
+    n_slots = arrs["prio"].shape[0]
+    p_idx = comm.index()
+
+    exchange = partial(exchange_boundary, boundary=arrs["boundary"],
+                       ghost_owner=arrs["ghost_owner"],
+                       ghost_slot=arrs["ghost_slot"],
+                       n_local_max=n_local_max, comm=comm,
+                       wire_dtype=jnp.int16 if cfg.wire16 else None)
+
+    view0 = jnp.zeros((n_slots,), jnp.int32)
+    usage0 = jnp.zeros((cfg.max_colors,), jnp.int32)
+
+    def round_body(state):
+        view, usage, rnd, _, n_ex = state
+        order_r, n_need = _compact_order(order, view)
+        n_need_max = comm.pmax(n_need)
+        n_steps = (n_need_max + cfg.superstep - 1) // cfg.superstep
+        rkey = jax.random.fold_in(jax.random.fold_in(key, rnd), p_idx)
+        rand_u32 = jax.random.bits(rkey, (n_slots,), jnp.uint32)
+
+        def superstep(si, carry):
+            view, usage, n_ex = carry
+            view, usage = _greedy_chunk(view, usage, order_r, rand_u32,
+                                        si * cfg.superstep, cfg.superstep,
+                                        arrs, p_idx, cfg)
+            do_ex = ((si + 1) % cfg.exchange_every == 0) | (si == n_steps - 1)
+            view = jax.lax.cond(do_ex, exchange, lambda v: v, view)
+            return view, usage, n_ex + do_ex.astype(jnp.int32)
+
+        view, usage, n_ex = jax.lax.fori_loop(
+            0, n_steps, superstep, (view, usage, n_ex))
+        view, n_conf = _detect_conflicts(view, arrs, n_local_max)
+        view = exchange(view)
+        n_conf = comm.psum(n_conf)
+        return view, usage, rnd + 1, n_conf, n_ex + 1
+
+    def cond(state):
+        _, _, rnd, n_conf, _ = state
+        return (n_conf > 0) & (rnd < cfg.max_rounds)
+
+    state0 = (view0, usage0, jnp.int32(0), jnp.int32(1), jnp.int32(0))
+    # round 0 must run: seed n_conf=1
+    view, usage, n_rounds, _, n_ex = jax.lax.while_loop(cond, round_body, state0)
+
+    local_max = jnp.max(view[:n_local_max])
+    stats = dict(
+        n_colors=comm.pmax(local_max),
+        n_rounds=n_rounds,
+        n_exchanges=n_ex,
+    )
+    return view, stats
+
+
+@lru_cache(maxsize=64)
+def _sim_fn(P, cfg):
+    fn = partial(color_spmd, cfg=cfg)
+    return jax.jit(lambda arrs, order, key: run_sim(fn, P, (arrs, order), (key,)))
+
+
+def color_graph_sim(pg: PartitionedGraph, order, cfg: ColorConfig,
+                    key=None):
+    """Run distributed coloring *simulated* on one device (P vmap lanes)."""
+    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    view, stats = _sim_fn(pg.P, cfg)(arrs, jnp.asarray(order), key)
+    return view, {k: int(v[0]) if v.ndim else int(v) for k, v in stats.items()}
+
+
+def color_graph_sharded(pg: PartitionedGraph, order, cfg: ColorConfig, mesh,
+                        key=None):
+    """Run distributed coloring on a real mesh axis ``workers``."""
+    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    fn = partial(color_spmd, cfg=cfg)
+    view, stats = jax.jit(
+        lambda a, o, k: run_sharded(fn, mesh, (a, o), (k,)))(
+            arrs, jnp.asarray(order), key)
+    return view, {k: int(jnp.max(v)) for k, v in stats.items()}

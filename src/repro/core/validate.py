@@ -1,0 +1,36 @@
+"""Validation and statistics helpers (host-side, numpy)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import Graph, PartitionedGraph
+
+
+def colors_from_views(pg: PartitionedGraph, views) -> np.ndarray:
+    """(P, n_slots) device views -> (n_global,) color vector."""
+    views = np.asarray(views)
+    return pg.gather_global_colors(views[:, : pg.n_local_max])
+
+
+def check_coloring(g: Graph, colors: np.ndarray) -> dict:
+    """Validity + quality stats of a global coloring."""
+    src = np.repeat(np.arange(g.n), g.degrees)
+    bad = colors[src] == colors[g.indices]
+    n_colors = int(colors.max(initial=0))
+    counts = np.bincount(colors, minlength=n_colors + 1)[1:]
+    return dict(
+        valid=bool((colors > 0).all()) and not bad.any(),
+        n_conflicting_edges=int(bad.sum()) // 2,
+        n_colors=n_colors,
+        class_sizes=counts,
+        class_balance=float(counts.std() / max(counts.mean(), 1e-9))
+        if n_colors else 0.0,
+    )
+
+
+def assert_valid(g: Graph, colors: np.ndarray, what: str = "coloring"):
+    st = check_coloring(g, colors)
+    assert st["valid"], (
+        f"invalid {what}: {st['n_conflicting_edges']} conflicting edges, "
+        f"min color {colors.min(initial=0)}")
+    return st

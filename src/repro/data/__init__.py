@@ -1,0 +1,6 @@
+"""Data pipeline + coloring-based conflict-free scheduling."""
+from . import coloring_sched, pipeline
+from .pipeline import DataConfig, DataLoader, device_batch, host_batch
+
+__all__ = ["DataConfig", "DataLoader", "coloring_sched", "device_batch",
+           "host_batch", "pipeline"]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the coloring hot spots (+ jnp oracles in ref.py)."""
+from . import ops, ref
+from .firstfit import TILE_V, color_select_pallas, conflict_pallas
+
+__all__ = ["TILE_V", "color_select_pallas", "conflict_pallas", "ops", "ref"]

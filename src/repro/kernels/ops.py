@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the Pallas color-selection kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` — the kernel
+body executes unmodified in Python, which validates the TPU code path; on a
+real TPU backend pass ``interpret=False`` (default chosen by backend).
+
+The wrappers pad the vertex dimension to the kernel tile and accept 0/negative
+neighbour-color padding (ignored per the semantics contract in ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .firstfit import TILE_V, color_select_pallas, conflict_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_v(x, v_pad, fill=0):
+    pad = [(0, v_pad - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("max_colors", "x", "interpret"))
+def color_select(nbr_colors, active, rand_u32, *, max_colors: int, x: int = 0,
+                 interpret: bool | None = None):
+    """First Fit (x=0) / Random-X Fit (x>0) over a dense neighbour tile.
+
+    nbr_colors (V, MAXD) int32; active (V,) bool; rand_u32 (V,) uint32.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    v = nbr_colors.shape[0]
+    v_pad = -(-v // TILE_V) * TILE_V
+    out = color_select_pallas(
+        _pad_v(nbr_colors, v_pad), _pad_v(active, v_pad),
+        _pad_v(rand_u32, v_pad), max_colors=max_colors, x=x,
+        interpret=interpret)
+    return out[:v]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conflict(my_color, my_prio, nbr_colors, nbr_prio, active, *,
+             interpret: bool | None = None):
+    """Conflict detection over a dense neighbour tile. Returns (V,) bool."""
+    if interpret is None:
+        interpret = _default_interpret()
+    v = nbr_colors.shape[0]
+    v_pad = -(-v // TILE_V) * TILE_V
+    out = conflict_pallas(
+        _pad_v(my_color, v_pad), _pad_v(my_prio, v_pad, fill=-1),
+        _pad_v(nbr_colors, v_pad), _pad_v(nbr_prio, v_pad, fill=-1),
+        _pad_v(active, v_pad), interpret=interpret)
+    return out[:v].astype(bool)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the color-selection kernels.
+
+Semantics contract (shared with the Pallas kernels, asserted in tests):
+
+- Colors are 1-based; color 0 and any padded/negative neighbour entry are
+  ignored (bit 0 of the forbidden set is always considered taken).
+- ``first_fit``: smallest color >= 1 not taken by a neighbour; if the whole
+  [0, max_colors) range is taken, returns max_colors - 1.
+- ``random_x``: uniform among the X smallest permissible colors (fewer if the
+  free set is smaller), using ``rand % n_free``.
+- ``conflict``: a vertex loses iff some neighbour has the same (nonzero)
+  color and strictly higher priority.
+- Inactive rows return 0 (first_fit/random_x) or False (conflict).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _forbidden(nbr_colors: jnp.ndarray, max_colors: int) -> jnp.ndarray:
+    """(V, D) neighbour colors -> (V, max_colors) forbidden mask (col 0 set)."""
+    v = nbr_colors.shape[0]
+    c = jnp.clip(nbr_colors, 0, max_colors - 1)
+    valid = (nbr_colors > 0) & (nbr_colors < max_colors)
+    occ = jnp.zeros((v, max_colors), bool)
+    rows = jnp.broadcast_to(jnp.arange(v)[:, None], c.shape)
+    occ = occ.at[rows, c].max(valid)
+    return occ.at[:, 0].set(True)
+
+
+def first_fit(nbr_colors: jnp.ndarray, active: jnp.ndarray,
+              max_colors: int) -> jnp.ndarray:
+    """(V, D), (V,) -> (V,) first-fit colors (0 where inactive)."""
+    occ = _forbidden(nbr_colors, max_colors)
+    first = jnp.argmin(occ, axis=1).astype(jnp.int32)  # first False
+    full = occ.all(axis=1)
+    first = jnp.where(full, max_colors - 1, first)
+    return jnp.where(active, first, 0).astype(jnp.int32)
+
+
+def random_x(nbr_colors: jnp.ndarray, active: jnp.ndarray,
+             rand_u32: jnp.ndarray, x: int, max_colors: int) -> jnp.ndarray:
+    """(V, D), (V,), (V,) -> (V,) Random-X Fit colors (0 where inactive)."""
+    occ = _forbidden(nbr_colors, max_colors)
+    # positions of free colors, ascending; pad with max_colors-1 sentinel
+    key = jnp.where(occ, jnp.int32(max_colors), jnp.arange(max_colors,
+                                                           dtype=jnp.int32))
+    cands = jnp.sort(key, axis=1)[:, :x]
+    cands = jnp.minimum(cands, max_colors - 1).astype(jnp.int32)
+    n_free = jnp.sum(cands < max_colors - 1, axis=1).astype(jnp.uint32)
+    n_free = jnp.maximum(n_free, jnp.uint32(1))
+    idx = (rand_u32 % n_free).astype(jnp.int32)
+    pick = jnp.take_along_axis(cands, idx[:, None], axis=1)[:, 0]
+    return jnp.where(active, pick, 0).astype(jnp.int32)
+
+
+def conflict(my_color: jnp.ndarray, my_prio: jnp.ndarray,
+             nbr_colors: jnp.ndarray, nbr_prio: jnp.ndarray,
+             active: jnp.ndarray) -> jnp.ndarray:
+    """(V,), (V,), (V, D), (V, D), (V,) -> (V,) bool 'must recolor'."""
+    same = (nbr_colors == my_color[:, None]) & (my_color[:, None] > 0)
+    lose = same & (nbr_prio > my_prio[:, None])
+    return lose.any(axis=1) & active

@@ -1,0 +1,169 @@
+"""Jit-ready step functions + ShapeDtypeStruct input builders per cell.
+
+``input_specs(arch, shape, mesh)`` returns (step_fn, example tree of
+ShapeDtypeStructs with NamedShardings, in_shardings tree) for every
+(architecture × input-shape) cell — weak-type-correct, shardable, and never
+allocating device memory. The dry-run lowers exactly these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import SHAPES, ArchConfig, ShapeConfig, plan_for_mesh
+from repro.models import cache_defs, decode_step, loss_fn, param_defs, prefill
+from repro.models.layers import ParamDef
+from repro.train.optimizer import OptConfig, adamw_update, opt_state_defs
+
+IS_DEF = lambda t: isinstance(t, ParamDef)  # noqa: E731
+
+
+def sds_tree(defs, mesh, plan):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, d.dtype,
+            sharding=NamedSharding(mesh, plan.spec(d.dims, d.shape))),
+        defs, is_leaf=IS_DEF)
+
+
+def shardings_of(sds):
+    return jax.tree.map(lambda s: s.sharding, sds)
+
+
+def batch_defs(cfg: ArchConfig, shape: ShapeConfig, *, decode: bool = False):
+    """ParamDef table for one batch (tokens + modality stubs)."""
+    B = shape.global_batch
+    S = 1 if decode else shape.seq_len
+    defs: dict[str, Any] = {
+        "tokens": ParamDef((B, S), ("batch", None), dtype="int32"),
+    }
+    if shape.is_train:
+        defs["labels"] = ParamDef((B, S), ("batch", None), dtype="int32")
+    if cfg.enc_dec and not decode:
+        defs["enc_embeds"] = ParamDef((B, cfg.enc_len, cfg.d_model),
+                                      ("batch", None, None),
+                                      dtype=cfg.compute_dtype)
+    if cfg.n_patches and not decode:
+        defs["patch_embeds"] = ParamDef((B, cfg.n_patches, cfg.d_model),
+                                        ("batch", None, None),
+                                        dtype=cfg.compute_dtype)
+        defs["pos3"] = ParamDef((3, B, S), (None, "batch", None),
+                                dtype="int32")
+    return defs
+
+
+def _split_micro(x, M: int, batch_axis: int = 0):
+    """(…, B, …) -> (M, …, B/M, …) microbatch leading axis."""
+    B = x.shape[batch_axis]
+    assert B % M == 0, f"batch {B} not divisible by grad_accum {M}"
+    x = jnp.moveaxis(x, batch_axis, 0)
+    x = x.reshape((M, B // M) + x.shape[1:])
+    return jnp.moveaxis(x, 1, batch_axis + 1) if batch_axis else x
+
+
+def make_train_step(cfg: ArchConfig, plan, opt_cfg: OptConfig):
+    pdefs = param_defs(cfg)
+    grad_specs = jax.tree.map(lambda d: plan.spec(d.dims, d.shape), pdefs,
+                              is_leaf=IS_DEF)
+
+    def constrain_grads(grads):
+        # pin gradients to the parameter sharding: the DP reduction lowers to
+        # reduce-scatter (1x wire) instead of a replicated all-reduce (2x)
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s)
+            if any(e is not None for e in s) else g, grads, grad_specs)
+
+    M = cfg.grad_accum
+
+    def train_step(params, opt_state, batch):
+        if M <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, cfg, plan)
+            grads = constrain_grads(grads)
+        else:
+            # gradient accumulation: scan over microbatches, f32 sharded
+            # accumulators — activation memory scales 1/M.
+            # ZeRO-2 twist: non-expert weights are all-gathered ONCE per step
+            # (constrained to a spec with the fsdp dim dropped) instead of
+            # once per microbatch — 1/M the FSDP all-gather traffic for
+            # ~2.6 GB of temp on deepseek (see EXPERIMENTS.md §Perf A.4).
+            def gathered(p, d: ParamDef):
+                if "exp" in d.dims:     # expert weights stay fully sharded
+                    return p
+                dims = tuple(None if x == "fsdp" else x for x in d.dims)
+                s = plan.spec(dims, d.shape)
+                return jax.lax.with_sharding_constraint(p, s)
+
+            params_g = jax.tree.map(gathered, params, pdefs, is_leaf=IS_DEF)
+            micro = {k: _split_micro(v, M, 1 if k == "pos3" else 0)
+                     for k, v in batch.items()}
+            g0 = jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, jnp.float32), s)
+                if any(e is not None for e in s)
+                else jnp.zeros(p.shape, jnp.float32), params, grad_specs)
+
+            def body(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params_g, mb, cfg, plan)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / M, g_acc, grads)
+                return (g_acc, loss_acc + loss / M,
+                        aux_acc + metrics["aux"] / M), None
+
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0.0), jnp.float32(0.0)), micro)
+            grads = constrain_grads(grads)
+            metrics = {"nll": loss, "aux": aux, "zloss": jnp.float32(0.0)}
+        params, opt_state, info = adamw_update(params, grads, opt_state,
+                                               opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **info}
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, plan, cache_len: int):
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, plan, cache_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, plan):
+    def serve_step(params, cache, batch):
+        new_cache, logits = decode_step(params, cache, batch["tokens"], cfg,
+                                        plan)
+        return new_cache, jnp.argmax(logits, axis=-1)
+    return serve_step
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig, mesh,
+                opt_cfg: OptConfig | None = None):
+    """(step_fn, args-as-SDS) for one dry-run cell."""
+    plan = plan_for_mesh(mesh)
+    opt_cfg = opt_cfg or OptConfig(state_dtype=arch.opt_state_dtype)
+    pdefs = param_defs(arch)
+    params_sds = sds_tree(pdefs, mesh, plan)
+
+    if shape.kind == "train":
+        opt_sds = sds_tree(opt_state_defs(pdefs, opt_cfg), mesh, plan)
+        batch_sds = sds_tree(batch_defs(arch, shape), mesh, plan)
+        fn = make_train_step(arch, plan, opt_cfg)
+        return fn, (params_sds, opt_sds, batch_sds)
+
+    if shape.kind == "prefill":
+        batch_sds = sds_tree(batch_defs(arch, shape), mesh, plan)
+        fn = make_prefill_step(arch, plan, shape.seq_len)
+        return fn, (params_sds, batch_sds)
+
+    if shape.kind == "decode":
+        cdefs = cache_defs(arch, shape.global_batch, shape.seq_len)
+        cache_sds = sds_tree(cdefs, mesh, plan)
+        batch_sds = sds_tree(batch_defs(arch, shape, decode=True), mesh, plan)
+        fn = make_decode_step(arch, plan)
+        return fn, (params_sds, cache_sds, batch_sds)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,60 @@
+"""Training launcher.
+
+CPU-scale real run:            python -m repro.launch.train --arch qwen3-0.6b \
+                                   --smoke --steps 200
+Production lowering (dry-run): use repro.launch.dryrun.
+
+``--smoke`` uses the reduced same-family config; otherwise the full assigned
+config is used (feasible only on a real cluster; on CPU it will be slow/OOM).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_arch, plan_for_mesh, smoke_of
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.train import FailureInjector, OptConfig, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.smoke:
+        arch = smoke_of(arch)
+    mesh = make_production_mesh() if args.production_mesh else \
+        make_local_mesh()
+    plan = plan_for_mesh(mesh)
+    data = DataConfig(vocab_size=arch.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    tr = Trainer(
+        arch, mesh, plan, data,
+        OptConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                  total_steps=args.steps),
+        TrainerConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir),
+        injector=FailureInjector(tuple(args.fail_at)) if args.fail_at
+        else None)
+    tr.run()
+    for h in tr.history:
+        print(json.dumps(h))
+    print(f"# params={arch.n_params():,} restarts={tr.restarts}")
+
+
+if __name__ == "__main__":
+    main()

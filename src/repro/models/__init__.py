@@ -1,0 +1,10 @@
+"""LM substrate: layers, attention, MoE, SSM, model assembly."""
+from . import attention, layers, model, moe, ssm
+from .layers import ParamDef, init_params, param_shapestructs, param_specs
+from .model import (backbone, cache_defs, decode_step, init_cache, layer_runs,
+                    loss_fn, param_defs, prefill)
+
+__all__ = ["ParamDef", "attention", "backbone", "cache_defs", "decode_step",
+           "init_cache", "init_params", "layer_runs", "layers", "loss_fn",
+           "model", "moe", "param_defs", "param_shapestructs", "param_specs",
+           "prefill", "ssm"]

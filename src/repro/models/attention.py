@@ -1,0 +1,292 @@
+"""Attention: blockwise (flash-style) SDPA, GQA/MQA, qk-norm, MLA, caches.
+
+Blockwise attention is pure JAX (scan over query blocks × scan over KV
+blocks, online softmax, f32 accumulators) so 32k prefill / 4k train never
+materialize S×S scores; the backward pass recomputes through the scans under
+the block-level remat policy (model.py).
+
+Decode uses a ring-buffer KV cache: capacity = the assignment's ``seq_len``,
+`pos % S` overwrite, full-window attention. MLA decode runs in *absorbed*
+form — scores and values are computed against the (kv_lora+rope) latent cache
+without materializing per-head K/V (the deepseek-v3 trick, memory-bound win).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShardingPlan
+from .layers import ParamDef, apply_m_rope, apply_rope, constrain, rms_norm
+
+NEG_INF = -1e30
+
+
+def _blockwise(q, k, v, *, causal: bool, scale: float, q_block: int = 512,
+               kv_block: int = 512):
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,Dk/Dv) -> (B,Sq,H,Dv); online softmax."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+
+    def pick(S, target):  # largest block <= target that divides S
+        for b in range(min(target, S), 0, -1):
+            if S % b == 0:
+                return b
+        return S
+
+    bq, bk = pick(Sq, q_block), pick(Sk, kv_block)
+    nq, nk = Sq // bq, Sk // bk
+
+    qb = q.reshape(B, nq, bq, Hkv, G, D)
+    kb = k.reshape(B, nk, bk, Hkv, D)
+    vb = v.reshape(B, nk, bk, Hkv, Dv)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                  # (B,bq,Hkv,G,D)
+        qpos = qidx * bq + jnp.arange(bq)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                kpos = kidx * bk + jnp.arange(bk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        acc0 = jnp.zeros((B, Hkv, G, bq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,Hkv,G,bq,Dv)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, ob = jax.lax.scan(q_step, None,
+                         (qb.swapaxes(0, 1), jnp.arange(nq)))
+    # ob (nq, B, bq, Hkv, G, Dv) -> (B, Sq, H, Dv)
+    return ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dv)
+
+
+def _decode_sdpa(q, k, v, scale: float, n_valid=None):
+    """q (B,1,H,D) vs cache k/v (B,S,Hkv,D*) -> (B,1,H,Dv).
+
+    `n_valid`: number of filled cache slots (unfilled ones are masked)."""
+    B, _, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qh = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    if n_valid is not None:
+        s = jnp.where(jnp.arange(S)[None, None, None] < n_valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, v.shape[3]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA / MQA (+ qk-norm, RoPE / M-RoPE)
+
+
+def gqa_defs(cfg: ArchConfig, dt: str) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    defs = {
+        "wq": ParamDef((d, H * hd), ("fsdp", "tp"), dtype=dt),
+        "wk": ParamDef((d, Hkv * hd), ("fsdp", "tp"), dtype=dt),
+        "wv": ParamDef((d, Hkv * hd), ("fsdp", "tp"), dtype=dt),
+        "wo": ParamDef((H * hd, d), ("tp", "fsdp"), dtype=dt),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="ones", dtype=dt)
+        defs["k_norm"] = ParamDef((hd,), (None,), init="ones", dtype=dt)
+    return defs
+
+
+def gqa_apply(p, x, pos, cfg: ArchConfig, plan: ShardingPlan, *,
+              causal=True, mode="train", cache=None, cache_pos=None,
+              pos3=None):
+    """mode: train/prefill (blockwise) | decode (ring-buffer cache)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if cfg.m_rope and pos3 is not None:
+        sections = _mrope_sections(hd)
+        q = apply_m_rope(q, pos3, sections, cfg.rope_theta)
+        k = apply_m_rope(k, pos3, sections, cfg.rope_theta)
+    elif cfg.rope_theta > 0:  # whisper (theta=0) uses absolute positions
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    q = constrain(q, plan, ("batch", None, "tp", None))
+    scale = hd ** -0.5
+
+    if mode == "decode":
+        S_cache = cache["k"].shape[1]
+        slot = cache_pos % S_cache
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(
+            cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(
+            cache["v"].dtype), (0, slot, 0, 0))
+        n_valid = jnp.minimum(cache_pos + 1, S_cache)
+        o = _decode_sdpa(q, k_cache, v_cache, scale, n_valid)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        o = _blockwise(q, k, v, causal=causal, scale=scale)
+        new_cache = None
+        if mode == "prefill":
+            if cache is not None:  # write prompt K/V into the cache buffer
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))}
+            else:
+                new_cache = {"k": k.astype(jnp.bfloat16),
+                             "v": v.astype(jnp.bfloat16)}
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return constrain(out, plan, ("batch", None, "fsdp")), new_cache
+
+
+def gqa_cross_apply(p, x, enc_kv, cfg: ArchConfig, plan: ShardingPlan):
+    """Cross-attention against precomputed encoder K/V (whisper decoder)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    o = _blockwise(q, enc_kv["k"], enc_kv["v"], causal=False,
+                   scale=hd ** -0.5)
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return constrain(out, plan, ("batch", None, "fsdp"))
+
+
+def encode_kv(p, x_enc, cfg: ArchConfig):
+    B, S, _ = x_enc.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {"k": (x_enc @ p["wk"]).reshape(B, S, Hkv, hd),
+            "v": (x_enc @ p["wv"]).reshape(B, S, Hkv, hd)}
+
+
+def _mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Qwen2-VL splits D/2 rotary channels among (t, h, w) as 2:3:3."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+# --------------------------------------------------------------------------
+# MLA (deepseek-v3 / minicpm3)
+
+
+def mla_defs(cfg: ArchConfig, dt: str) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    defs = {
+        "wkv_a": ParamDef((d, kvl + rope), ("fsdp", None), dtype=dt),
+        "kv_norm": ParamDef((kvl,), (None,), init="ones", dtype=dt),
+        "wkv_b": ParamDef((kvl, H * (nope + vd)), ("fsdp", "tp"), dtype=dt),
+        "wo": ParamDef((H * vd, d), ("tp", "fsdp"), dtype=dt),
+    }
+    if ql > 0:
+        defs["wq_a"] = ParamDef((d, ql), ("fsdp", None), dtype=dt)
+        defs["q_norm"] = ParamDef((ql,), (None,), init="ones", dtype=dt)
+        defs["wq_b"] = ParamDef((ql, H * (nope + rope)), ("fsdp", "tp"),
+                                dtype=dt)
+    else:
+        defs["wq"] = ParamDef((d, H * (nope + rope)), ("fsdp", "tp"), dtype=dt)
+    return defs
+
+
+def _mla_q(p, x, cfg: ArchConfig):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank > 0:
+        q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.rms_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, nope + rope)
+    return q[..., :nope], q[..., nope:]
+
+
+def mla_apply(p, x, pos, cfg: ArchConfig, plan: ShardingPlan, *,
+              mode="train", cache=None, cache_pos=None):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, vd, kvl = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                           cfg.kv_lora_rank)
+    scale = (nope + rope) ** -0.5
+
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]                                 # (B,S,kvl+rope)
+    c_kv = rms_norm(kv_a[..., :kvl], p["kv_norm"], cfg.rms_eps)
+    k_rope = apply_rope(kv_a[..., kvl:][:, :, None, :], pos,
+                        cfg.rope_theta)                   # (B,S,1,rope)
+
+    wkv_b = p["wkv_b"].reshape(kvl, H, nope + vd)
+    w_k, w_v = wkv_b[..., :nope], wkv_b[..., nope:]
+
+    if mode == "decode":
+        S_cache = cache["c_kv"].shape[1]
+        slot = cache_pos % S_cache
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, slot, 0))
+        r_cache = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype),
+            (0, slot, 0))
+        # absorbed scores: q_nope' = q_nope @ w_k^T  -> (B,1,H,kvl)
+        q_abs = jnp.einsum("bshn,khn->bshk", q_nope, w_k)
+        s = (jnp.einsum("bshk,btk->bhst", q_abs, c_cache,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshr,btr->bhst", q_rope, r_cache,
+                          preferred_element_type=jnp.float32)) * scale
+        n_valid = jnp.minimum(cache_pos + 1, S_cache)
+        s = jnp.where(jnp.arange(S_cache)[None, None, None] < n_valid, s,
+                      -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btk->bshk", pr.astype(c_cache.dtype), c_cache,
+                           preferred_element_type=jnp.float32)
+        o = jnp.einsum("bshk,khv->bshv", o_lat.astype(x.dtype), w_v)
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+    else:
+        # materialized K/V + blockwise attention
+        k_nope = jnp.einsum("btk,khn->bthn", c_kv, w_k)
+        v = jnp.einsum("btk,khv->bthv", c_kv, w_v)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = constrain(q, plan, ("batch", None, "tp", None))
+        o = _blockwise(q, k, v, causal=True, scale=scale)
+        new_cache = None
+        if mode == "prefill":
+            if cache is not None:
+                new_cache = {
+                    "c_kv": jax.lax.dynamic_update_slice(
+                        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                        (0, 0, 0)),
+                    "k_rope": jax.lax.dynamic_update_slice(
+                        cache["k_rope"],
+                        k_rope[:, :, 0].astype(cache["k_rope"].dtype),
+                        (0, 0, 0))}
+            else:
+                new_cache = {"c_kv": c_kv.astype(jnp.bfloat16),
+                             "k_rope": k_rope[:, :, 0].astype(jnp.bfloat16)}
+    out = o.reshape(B, S, H * vd) @ p["wo"]
+    return constrain(out, plan, ("batch", None, "fsdp")), new_cache

@@ -1,0 +1,153 @@
+"""Parameter definitions + elementary layers (functional, framework-free).
+
+Parameters live in a flat ``{path: array}`` dict. Each architecture declares a
+flat ``{path: ParamDef}`` table (shape, dtype, init scale, logical sharding
+dims); from that single table we derive real initialization, the
+ShapeDtypeStruct tree for the dry-run, and the NamedSharding tree — one source
+of truth, no drift between init and distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShardingPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    dims: tuple[str | None, ...]          # logical sharding per dim
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float | None = None            # None -> 1/sqrt(fan_in)
+    dtype: str = "bfloat16"
+
+    def initializer(self, key):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32)
+                * scale).astype(self.dtype)
+
+
+def init_params(defs: dict[str, ParamDef], key) -> dict[str, jnp.ndarray]:
+    keys = jax.random.split(key, len(defs))
+    return {name: d.initializer(k)
+            for (name, d), k in zip(sorted(defs.items()), keys)}
+
+
+def param_specs(defs: dict[str, ParamDef], plan: ShardingPlan):
+    """{path: PartitionSpec} matching `defs` under the plan."""
+    return {name: plan.spec(d.dims, d.shape) for name, d in defs.items()}
+
+
+def param_shapestructs(defs: dict[str, ParamDef], mesh, plan: ShardingPlan):
+    """{path: ShapeDtypeStruct-with-sharding} — dry-run stand-ins."""
+    from jax.sharding import NamedSharding
+    return {name: jax.ShapeDtypeStruct(
+        d.shape, d.dtype, sharding=NamedSharding(mesh, plan.spec(d.dims,
+                                                                 d.shape)))
+        for name, d in defs.items()}
+
+
+def count_params(defs: dict[str, ParamDef]) -> int:
+    return int(sum(np.prod(d.shape) for d in defs.values()))
+
+
+# --------------------------------------------------------------------------
+# Elementary ops (all take explicit params, compute dtype from inputs)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, pos, theta: float = 1e4):
+    """x (..., S, H, D), pos (..., S) -> rotated x (half-split convention)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)      # (D/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs            # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x, pos3, sections: tuple[int, int, int], theta: float = 1e4):
+    """Qwen2-VL M-RoPE: pos3 (3, ..., S); `sections` split D/2 among t/h/w."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)       # (D/2,)
+    sec = np.cumsum((0,) + tuple(sections))
+    assert sec[-1] == d // 2, f"M-RoPE sections {sections} != head_dim/2 {d//2}"
+    stream = np.zeros(d // 2, np.int32)
+    for i in range(3):
+        stream[sec[i]:sec[i + 1]] = i
+    pos = jnp.take(pos3, jnp.asarray(stream), axis=0)            # (D/2, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1)                               # (..., S, D/2)
+    ang = pos.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_from_pos(pos, d_model: int):
+    """pos (..., S) int -> (..., S, d_model) sinusoidal embedding (f32)."""
+    half = d_model // 2
+    inv = jnp.asarray(1.0 / (10000 ** (np.arange(half) / half)), jnp.float32)
+    ang = pos[..., None].astype(jnp.float32) * inv
+    out = jnp.zeros(pos.shape + (d_model,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(ang))
+    return out.at[..., 1::2].set(jnp.cos(ang))
+
+
+def sinusoidal_pos(seq_len: int, d_model: int):
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / (10000 ** (dim / d_model))
+    out = np.zeros((seq_len, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def geglu(x, w_gate, w_up, w_down):
+    h = jax.nn.gelu(x @ w_gate, approximate=True) * (x @ w_up)
+    return h @ w_down
+
+
+def constrain(x, plan: ShardingPlan, dims: tuple[str | None, ...]):
+    """with_sharding_constraint under the ambient mesh (no-op if no axes)."""
+    spec = plan.spec(dims, x.shape)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN: top-k router + sort-based capacity dispatch (EP).
+
+Dispatch is MegaBlocks-style but static-shaped: assignments are sorted by
+expert, each expert gets a ``capacity`` of slots, overflow tokens are dropped
+(capacity_factor bounds the drop rate). The (E, C, d) dispatch tensor is
+sharded over the ``exp`` logical axis, so GSPMD inserts the all-to-all from
+batch-sharded tokens to expert-sharded slots — the EP communication pattern.
+
+Router: softmax gating over top-k with load-balance + z auxiliary losses
+(Switch/GShard style; deepseek-v3's bias-balanced sigmoid router is noted in
+DESIGN.md as a simplification).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShardingPlan
+from .layers import ParamDef, constrain
+
+
+def moe_defs(cfg: ArchConfig, dt: str) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    defs = {
+        "router": ParamDef((d, E), ("fsdp", None), dtype="float32"),
+        "experts": {
+            "w_gate": ParamDef((E, d, f), ("exp", "fsdp", None), dtype=dt),
+            "w_up": ParamDef((E, d, f), ("exp", "fsdp", None), dtype=dt),
+            "w_down": ParamDef((E, f, d), ("exp", None, "fsdp"), dtype=dt),
+        },
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        defs["shared"] = {
+            "w_gate": ParamDef((d, fs), ("fsdp", "tp"), dtype=dt),
+            "w_up": ParamDef((d, fs), ("fsdp", "tp"), dtype=dt),
+            "w_down": ParamDef((fs, d), ("tp", "fsdp"), dtype=dt),
+        }
+    return defs
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(n_tokens * cfg.n_experts_per_tok * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch_group(xg, idx, gate, E: int, C: int):
+    """Sort-based dispatch of ONE group. xg (T,d), idx/gate (T,k).
+
+    Returns (dispatched (E*C, d), slot (T*k,), keep (T*k,), t_sorted)."""
+    T, d = xg.shape
+    k = idx.shape[1]
+    expert = idx.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(expert, stable=True)
+    e_sorted, t_sorted = expert[order], tok[order]
+    counts = jnp.zeros((E,), jnp.int32).at[e_sorted].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, e_sorted * C + pos_in_e, E * C)      # dummy slot
+    dispatched = jnp.zeros((E * C + 1, d), xg.dtype).at[slot].set(
+        xg[t_sorted])[:E * C]
+    return dispatched, slot, keep, t_sorted, order
+
+
+def moe_apply(p, x, cfg: ArchConfig, plan: ShardingPlan):
+    """x (B, S, d) -> (B, S, d), aux-loss scalar.
+
+    GShard-style *grouped* dispatch: each batch row is a dispatch group with
+    its own capacity C = ceil(S·k·cf / E), so the (G, E, C, d) dispatch
+    tensor is sharded over BOTH the data axis (groups) and the expert axis —
+    expert compute and all-to-all volume scale 1/(dp·ep) instead of 1/ep
+    (the ungrouped scheme replicated expert work across the data axis; see
+    EXPERIMENTS.md §Perf hillclimb A, 16× compute reduction on deepseek)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_per_tok
+    C = capacity(S, cfg)
+    xf = x.reshape(B, S, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                        # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses: load balance (Switch) + router z-loss (global over tokens)
+    me = probs.mean((0, 1))                                     # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (B * S * k))
+    aux = E * jnp.sum(me * ce)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = aux + 1e-3 * zloss
+
+    # ---- per-group sort-based dispatch (vmapped over batch rows) ---------
+    dispatched, slot, keep, t_sorted, order = jax.vmap(
+        lambda xg, ig, gg: _dispatch_group(xg, ig, gg, E, C))(xf, idx, gate)
+    h = dispatched.reshape(B, E, C, d)
+    # reshard: groups stay on the data axis, experts move to the model axis
+    # -> GSPMD inserts the (dp x ep) all-to-all here
+    h = constrain(h, plan, ("batch", "exp", None, None))
+
+    # ---- expert computation (grouped einsum, MXU-shaped) -----------------
+    eg = p["experts"]
+    hidden = jax.nn.silu(jnp.einsum("gecd,edf->gecf", h, eg["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", h, eg["w_up"])
+    out_e = jnp.einsum("gecf,efd->gecd", hidden, eg["w_down"])
+    out_e = constrain(out_e, plan, ("batch", "exp", None, None))
+
+    # ---- combine (back on the data axis) ----------------------------------
+    flat = out_e.reshape(B, E * C, d)
+    gathered = jax.vmap(lambda f, s, kp: jnp.where(
+        kp[:, None], f[jnp.minimum(s, E * C - 1)], 0))(flat, slot, keep)
+    g_sorted = jax.vmap(lambda g, o: g.reshape(-1)[o])(gate, order)
+    y = jax.vmap(lambda ts, gv, gs: jnp.zeros((S, d), jnp.float32)
+                 .at[ts].add(gv.astype(jnp.float32) * gs[:, None]))(
+        t_sorted, gathered, g_sorted)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        xr = xf.reshape(B * S, d)
+        y = y + (jax.nn.silu(xr @ sh["w_gate"]) * (xr @ sh["w_up"])
+                 @ sh["w_down"]).astype(jnp.float32).reshape(B, S, d)
+
+    y = y.astype(x.dtype).reshape(B, S, d)
+    return constrain(y, plan, ("batch", None, "fsdp")), aux

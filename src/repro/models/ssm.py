@@ -1,0 +1,258 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and Mamba (for Jamba).
+
+RWKV6 time-mix uses data-dependent per-channel decays. We implement the
+*chunked* parallel form (GLA-style): within a chunk of length C the decays
+are handled with cumulative log-decay matrices (f32), across chunks a
+recurrent state (B, H, dk, dv) is carried by a scan over S/C steps — the
+TPU-friendly formulation (matmuls instead of a length-S scan). A step form
+(`rwkv6_step`) serves decode with O(1) state.
+
+Mamba is the classic selective SSM: causal depthwise conv + input-dependent
+(dt, B, C) and a diagonal state scan, carried over the sequence by lax.scan
+(d_state=16 keeps the state small); decode keeps (conv window, h) as cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShardingPlan
+from .layers import ParamDef, constrain, rms_norm
+
+# --------------------------------------------------------------------------
+# RWKV6
+
+
+def rwkv6_defs(cfg: ArchConfig, dt: str) -> dict:
+    d = cfg.d_model
+    H = max(d // 64, 1)                      # head_size 64 (RWKV convention)
+    lora = max(32, d // 32)
+    return {
+        "w_r": ParamDef((d, d), ("fsdp", "tp"), dtype=dt),
+        "w_k": ParamDef((d, d), ("fsdp", "tp"), dtype=dt),
+        "w_v": ParamDef((d, d), ("fsdp", "tp"), dtype=dt),
+        "w_g": ParamDef((d, d), ("fsdp", "tp"), dtype=dt),
+        "w_o": ParamDef((d, d), ("tp", "fsdp"), dtype=dt),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x W_a) W_b))
+        "decay_w0": ParamDef((d,), (None,), init="zeros", dtype="float32"),
+        "decay_a": ParamDef((d, lora), ("fsdp", None), dtype=dt),
+        "decay_b": ParamDef((lora, d), (None, "fsdp"), dtype=dt),
+        "bonus_u": ParamDef((d,), (None,), init="zeros", dtype="float32"),
+        # token-shift mixing coefficients
+        "mix": ParamDef((5, d), (None, None), init="zeros", dtype="float32"),
+        "ln_x": ParamDef((d,), (None,), init="ones", dtype=dt),
+    }
+
+
+def _rwkv6_inputs(p, x, x_prev, cfg):
+    """Token-shifted projections. x (B,S,d); x_prev (B,1,d) last token of
+    previous segment (zeros at sequence start)."""
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)     # shifted
+    mix = jax.nn.sigmoid(p["mix"]).astype(x.dtype)        # (5, d)
+    def mixed(i):
+        return x + (xs - x) * mix[i]
+    r = mixed(0) @ p["w_r"]
+    k = mixed(1) @ p["w_k"]
+    v = mixed(2) @ p["w_v"]
+    g = jax.nn.silu(mixed(3) @ p["w_g"])
+    lw = (p["decay_w0"]
+          + jnp.tanh(mixed(4) @ p["decay_a"]) @ p["decay_b"])
+    # log decay in [-5, 0): the lower clamp bounds the intra-chunk exponent
+    # (chunk=16 -> |cum| <= 80 < log(f32 max)), exactly as chunked GLA does.
+    log_w = -jnp.clip(jnp.exp(jnp.clip(lw.astype(jnp.float32), -10.0, 6.0)),
+                      1e-6, 5.0)
+    return r, k, v, g, log_w
+
+
+def rwkv6_chunked(p, x, x_prev, state, cfg: ArchConfig,
+                  plan: ShardingPlan, chunk: int = 16):
+    """x (B,S,d) -> (y, (x_last, state)). state (B,H,dk,dv) f32."""
+    B, S, d = x.shape
+    H = max(d // 64, 1)
+    dk = dv = d // H
+    r, k, v, g, log_w = _rwkv6_inputs(p, x, x_prev, cfg)
+    u = p["bonus_u"].reshape(H, dk)
+
+    C = min(chunk, S)
+    while S % C != 0:  # largest chunk <= requested that divides S
+        C -= 1
+    N = S // C
+
+    def reshape_h(t):                                     # (B,S,d)->(N,B,H,C,dk)
+        return t.reshape(B, N, C, H, -1).transpose(1, 0, 3, 2, 4)
+
+    rs, ks, vs = reshape_h(r), reshape_h(k), reshape_h(v)
+    lws = reshape_h(log_w).astype(jnp.float32)            # (N,B,H,C,dk)
+
+    def chunk_step(state, inp):
+        rc, kc, vc, lwc = inp                             # (B,H,C,*)
+        cum = jnp.cumsum(lwc, axis=2)                     # inclusive Σ log w
+        total = cum[:, :, -1:]                            # (B,H,1,dk)
+        # decay of state contribution up to each position (exclusive)
+        dec_q = jnp.exp(cum - lwc)                        # Π_{s<t} w_s
+        r_dec = (rc.astype(jnp.float32) * dec_q)
+        # inter-chunk: r_t · (Π_{s<t} w) · state
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, state)
+        # intra-chunk: pairwise decays Π_{s<t..} via cum differences
+        ki = (kc.astype(jnp.float32) * jnp.exp(-cum))     # k_s / Π_{u<=s} w
+        # att[t,s] = Σ_k r_t Π_{u<=t-1}w / Π_{u<=s}w · k_s, strictly lower-tri
+        att = jnp.einsum("bhck,bhsk->bhcs", r_dec, ki)
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhcs,bhsv->bhcv", att, vc.astype(jnp.float32))
+        # current-token bonus u
+        y_diag = jnp.einsum("bhck,bhck->bhc", rc.astype(jnp.float32) * u[None, :, None, :],
+                            kc.astype(jnp.float32))[..., None] \
+            * vc.astype(jnp.float32)
+        # state update: S' = diag(Πw) S + Σ_s (Π_{u>s} w ⊙ k_s)^T v_s
+        k_dec = kc.astype(jnp.float32) * jnp.exp(total - cum)
+        state = (jnp.exp(total).swapaxes(2, 3) * state
+                 + jnp.einsum("bhsk,bhsv->bhkv", k_dec,
+                              vc.astype(jnp.float32)))
+        return state, y_inter + y_intra + y_diag
+
+    state, ys = jax.lax.scan(chunk_step, state, (rs, ks, vs, lws))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, d)      # back to (B,S,d)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"], cfg.rms_eps) * g
+    out = y @ p["w_o"]
+    out = constrain(out, plan, ("batch", None, "fsdp"))
+    return out, (x[:, -1:], state)
+
+
+def rwkv6_step(p, x, x_prev, state, cfg: ArchConfig, plan: ShardingPlan):
+    """Single-token decode. x (B,1,d); state (B,H,dk,dv)."""
+    B, _, d = x.shape
+    H = max(d // 64, 1)
+    dk = d // H
+    r, k, v, g, log_w = _rwkv6_inputs(p, x, x_prev, cfg)
+    u = p["bonus_u"].reshape(H, dk)
+    rh = r.reshape(B, H, dk).astype(jnp.float32)
+    kh = k.reshape(B, H, dk).astype(jnp.float32)
+    vh = v.reshape(B, H, dk).astype(jnp.float32)
+    w = jnp.exp(log_w.reshape(B, H, dk))
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, state + u[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.rms_eps) * g
+    return (y @ p["w_o"]), (x, state)
+
+
+def rwkv6_ffn_defs(cfg: ArchConfig, dt: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_k": ParamDef((d, f), ("fsdp", "tp"), dtype=dt),
+        "w_v": ParamDef((f, d), ("tp", "fsdp"), dtype=dt),
+        "w_r": ParamDef((d, d), ("fsdp", "tp"), dtype=dt),
+        "mix": ParamDef((2, d), (None, None), init="zeros", dtype="float32"),
+    }
+
+
+def rwkv6_ffn(p, x, x_prev, cfg: ArchConfig, plan: ShardingPlan):
+    """RWKV channel-mix: relu² K, sigmoid receptance gate."""
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mix = jax.nn.sigmoid(p["mix"]).astype(x.dtype)
+    xk = x + (xs - x) * mix[0]
+    xr = x + (xs - x) * mix[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"])
+    return constrain(out, plan, ("batch", None, "fsdp")), x[:, -1:]
+
+
+# --------------------------------------------------------------------------
+# Mamba (selective SSM, for Jamba)
+
+
+def mamba_defs(cfg: ArchConfig, dt: str) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    ds, dc = cfg.d_state, cfg.d_conv
+    dt_rank = max(d // 16, 1)
+    return {
+        "w_in": ParamDef((d, 2 * di), ("fsdp", "tp"), dtype=dt),
+        "conv_w": ParamDef((dc, di), (None, "tp"), scale=0.5, dtype=dt),
+        "conv_b": ParamDef((di,), ("tp",), init="zeros", dtype=dt),
+        "w_xdt": ParamDef((di, dt_rank), ("tp", None), dtype=dt),
+        "w_dt": ParamDef((dt_rank, di), (None, "tp"), dtype=dt),
+        "dt_bias": ParamDef((di,), ("tp",), init="zeros", dtype="float32"),
+        "w_bc": ParamDef((di, 2 * ds), ("tp", None), dtype=dt),
+        "log_a": ParamDef((di, ds), ("tp", None), init="zeros",
+                          dtype="float32"),
+        "d_skip": ParamDef((di,), ("tp",), init="ones", dtype="float32"),
+        "w_out": ParamDef((di, d), ("tp", "fsdp"), dtype=dt),
+    }
+
+
+def _mamba_bcdt(p, u):
+    """u (..., di) -> dt (softplus), B, C."""
+    ds = p["log_a"].shape[1]
+    dt = jax.nn.softplus(
+        (u @ p["w_xdt"]) @ p["w_dt"]
+        + p["dt_bias"].astype(u.dtype)).astype(jnp.float32)
+    bc = u @ p["w_bc"]
+    return dt, bc[..., :ds].astype(jnp.float32), bc[..., ds:].astype(jnp.float32)
+
+
+def mamba_apply(p, x, conv_state, h_state, cfg: ArchConfig,
+                plan: ShardingPlan):
+    """x (B,S,d) -> (y, (conv_state, h_state)). h (B,di,ds) f32,
+    conv_state (B, d_conv-1, di)."""
+    B, S, d = x.shape
+    di = cfg.expand * d
+    dc = cfg.d_conv
+    xz = x @ p["w_in"]
+    u, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv over the sequence
+    u_pad = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    new_conv_state = u_pad[:, -(dc - 1):]
+    stack = jnp.stack([u_pad[:, i:i + S] for i in range(dc)], axis=-1)
+    u = jnp.einsum("bsdc,cd->bsd", stack, p["conv_w"]) + p["conv_b"]
+    u = jax.nn.silu(u)
+
+    dt, Bm, Cm = _mamba_bcdt(p, u)                        # (B,S,di),(B,S,ds)
+    A = -jnp.exp(p["log_a"])                              # (di, ds)
+
+    # chunked selective scan: materializing exp(dt·A) over the full sequence
+    # is (B,S,di,ds) — 67 GB/layer/device for jamba train_4k. Chunk S so the
+    # working set is (B,ck,di,ds) while the recurrence stays exact.
+    ck = 128
+    while S % ck != 0:
+        ck -= 1
+    nc = S // ck
+
+    def chunk(h, inp):
+        dt_c, u_c, B_c, C_c = inp                        # (B,ck,…)
+        dA = jnp.exp(dt_c[..., None] * A)                # (B,ck,di,ds)
+        dBu = (dt_c * u_c)[..., None] * B_c[:, :, None, :]
+
+        def step(h, t_inp):
+            dA_t, dBu_t, C_t = t_inp
+            h = dA_t * h + dBu_t                         # (B,di,ds)
+            return h, jnp.einsum("bds,bs->bd", h, C_t)
+
+        h, ys = jax.lax.scan(
+            step, h, (dA.swapaxes(0, 1), dBu.swapaxes(0, 1),
+                      C_c.swapaxes(0, 1)))
+        return h, ys                                      # ys (ck,B,di)
+
+    def to_chunks(t):                                     # (B,S,…)->(nc,B,ck,…)
+        return t.reshape((B, nc, ck) + t.shape[2:]).swapaxes(0, 1)
+
+    h_state, ys = jax.lax.scan(
+        chunk, h_state,
+        (to_chunks(dt), to_chunks(u.astype(jnp.float32)), to_chunks(Bm),
+         to_chunks(Cm)))
+    # ys (nc, ck, B, di) -> (B, S, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(B, S, -1) \
+        + u.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return constrain(y, plan, ("batch", None, "fsdp")), \
+        (new_conv_state.astype(x.dtype), h_state)
+
+
+def mamba_step(p, x, conv_state, h_state, cfg: ArchConfig,
+               plan: ShardingPlan):
+    """Single-token decode; same caches as mamba_apply."""
+    y, (conv_state, h_state) = mamba_apply(p, x, conv_state, h_state, cfg,
+                                           plan)
+    return y, (conv_state, h_state)

@@ -1,0 +1,98 @@
+"""AdamW from scratch (no optax): pytree states, dtype policy, global clip.
+
+Optimizer state mirrors the parameter sharding (FSDP over ("pod","data") ×
+TP over "model"), so m/v never exceed the per-device parameter footprint.
+``state_dtype="bfloat16"`` halves it again — the policy that lets
+deepseek-v3-671B train on 512×16 GB (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+def lr_at(step, cfg: OptConfig):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.peak_lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def opt_state_defs(pdefs, cfg: OptConfig) -> dict:
+    """ParamDef table for the optimizer state (for dry-run SDS trees)."""
+    def mv(d: ParamDef) -> ParamDef:
+        return ParamDef(d.shape, d.dims, init="zeros", dtype=cfg.state_dtype)
+    is_def = lambda t: isinstance(t, ParamDef)  # noqa: E731
+    return {
+        "m": jax.tree.map(mv, pdefs, is_leaf=is_def),
+        "v": jax.tree.map(mv, pdefs, is_leaf=is_def),
+        "count": ParamDef((), (), init="zeros", dtype="int32"),
+    }
+
+
+def init_opt_state(params, cfg: OptConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.int32(0)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptConfig):
+    """One AdamW step; returns (params, opt_state, info)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(count, cfg)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * g * g
+        step_ = lr * (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_ = step_ + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - step_).astype(p.dtype),
+                m32.astype(m.dtype), v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

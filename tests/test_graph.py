@@ -1,0 +1,103 @@
+"""Graph substrate: generators, partitioning invariants (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Graph, partition_graph, rmat
+
+
+def random_graph(n, p, seed):
+    g = np.random.default_rng(seed).random((n, n)) < p
+    g = np.triu(g, 1)
+    g = g | g.T
+    src, dst = np.nonzero(g)
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    return Graph(n, np.cumsum(indptr), dst.astype(np.int32))
+
+
+class TestGenerators:
+    def test_rmat_symmetric_no_selfloops(self):
+        g = rmat.rmat_good(8, 8, seed=2)
+        src = np.repeat(np.arange(g.n), g.degrees)
+        assert (src != g.indices).all()
+        # symmetry: edge set equals its transpose
+        fwd = set(zip(src.tolist(), g.indices.tolist()))
+        assert all((v, u) in fwd for u, v in fwd)
+
+    def test_grid_degrees(self):
+        g = rmat.grid2d(5, 5, 9)
+        assert g.n == 25
+        assert g.max_degree == 8  # interior of a 9-pt stencil
+        g5 = rmat.grid2d(5, 5, 5)
+        assert g5.max_degree == 4
+
+    def test_grid3d(self):
+        g = rmat.grid3d(4, 4, 4)
+        assert g.n == 64
+        assert g.max_degree == 26
+
+    def test_suites_build(self):
+        for name, fn in {**rmat.SUITE_REAL}.items():
+            if "geom" in name:
+                continue
+            g = fn()
+            assert g.n > 0 and g.m > 0
+
+
+class TestPartition:
+    @pytest.mark.parametrize("P", [1, 2, 3, 7, 8])
+    def test_edges_preserved(self, P):
+        g = rmat.rmat_er(8, 8, seed=1)
+        pg = partition_graph(g, P)
+        # reconstruct global adjacency from per-proc CSR
+        edges = set()
+        for p in range(pg.P):
+            nl = int(pg.n_local[p])
+            for v in range(nl):
+                gv = pg.gvid[p, v]
+                for e in range(pg.indptr[p, v], pg.indptr[p, v + 1]):
+                    slot = pg.indices[p, e]
+                    gu = pg.gvid[p, slot]
+                    assert gu >= 0
+                    edges.add((int(gv), int(gu)))
+        src = np.repeat(np.arange(g.n), g.degrees)
+        truth = set(zip(src.tolist(), g.indices.tolist()))
+        assert edges == truth
+
+    def test_ghost_maps(self):
+        g = rmat.grid2d(16, 16, 9)
+        pg = partition_graph(g, 4)
+        for p in range(4):
+            for gi in range(int(pg.n_ghost[p])):
+                owner = pg.ghost_owner[p, gi]
+                slot = pg.ghost_slot[p, gi]
+                gvid = pg.gvid[p, pg.n_local_max + gi]
+                # the owner's boundary list at `slot` is exactly this vertex
+                bnd_local = pg.boundary[owner, slot]
+                assert pg.gvid[owner, bnd_local] == gvid
+
+    def test_internal_flags(self):
+        g = rmat.grid2d(16, 16, 5)
+        pg = partition_graph(g, 4)
+        for p in range(4):
+            nl = int(pg.n_local[p])
+            for v in range(nl):
+                remote = any(pg.indices[p, e] >= pg.n_local_max
+                             for e in range(pg.indptr[p, v],
+                                            pg.indptr[p, v + 1]))
+                assert pg.is_internal[p, v] == (not remote)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(6, 40), p=st.floats(0.05, 0.5),
+           P=st.integers(1, 5), seed=st.integers(0, 99))
+    def test_partition_roundtrip_property(self, n, p, P, seed):
+        g = random_graph(n, p, seed)
+        pg = partition_graph(g, P)
+        assert int(pg.n_local.sum()) == n
+        # every cross edge appears on both sides
+        total_edges = 0
+        for q in range(P):
+            nl = int(pg.n_local[q])
+            total_edges += int(pg.indptr[q, nl])
+        assert total_edges == g.m_directed

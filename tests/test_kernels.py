@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracle: shape/dtype sweeps + hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.firstfit import TILE_V
+
+
+def _case(rng, v, d, mc):
+    nbr = rng.integers(-2, mc + 8, (v, d)).astype(np.int32)
+    active = rng.random(v) < 0.85
+    rand = rng.integers(0, 2**32, v, dtype=np.uint32)
+    return nbr, active, rand
+
+
+@pytest.mark.parametrize("v", [1, 7, TILE_V, TILE_V + 3, 2 * TILE_V])
+@pytest.mark.parametrize("d", [1, 16, 33])
+@pytest.mark.parametrize("mc", [32, 64, 256])
+def test_first_fit_sweep(rng, v, d, mc):
+    nbr, active, rand = _case(rng, v, d, mc)
+    got = ops.color_select(nbr, active, rand, max_colors=mc, x=0)
+    want = ref.first_fit(jnp.asarray(nbr), jnp.asarray(active), mc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("x", [1, 5, 10, 50])
+@pytest.mark.parametrize("mc", [64, 128])
+def test_random_x_sweep(rng, x, mc):
+    nbr, active, rand = _case(rng, 300, 21, mc)
+    got = ops.color_select(nbr, active, rand, max_colors=mc, x=x)
+    want = ref.random_x(jnp.asarray(nbr), jnp.asarray(active),
+                        jnp.asarray(rand), x, mc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_random_x_within_free_set(rng):
+    mc = 64
+    nbr, active, rand = _case(rng, 128, 9, mc)
+    got = np.asarray(ops.color_select(nbr, active, rand, max_colors=mc, x=5))
+    occ = np.asarray(ref._forbidden(jnp.asarray(nbr), mc))
+    for i in range(128):
+        if active[i] and got[i] < mc - 1:
+            assert not occ[i, got[i]], f"row {i} picked a forbidden color"
+
+
+def test_conflict_sweep(rng):
+    v, d, mc = 3 * TILE_V + 11, 17, 64
+    nbr, active, rand = _case(rng, v, d, mc)
+    myc = rng.integers(0, mc, v).astype(np.int32)
+    myp = rng.integers(0, 10_000, v).astype(np.int32)
+    nbrp = rng.integers(0, 10_000, (v, d)).astype(np.int32)
+    got = ops.conflict(myc, myp, nbr, nbrp, active)
+    want = ref.conflict(jnp.asarray(myc), jnp.asarray(myp), jnp.asarray(nbr),
+                        jnp.asarray(nbrp), jnp.asarray(active))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data(), v=st.integers(1, 80), d=st.integers(1, 12),
+       mc_pow=st.integers(5, 8), x=st.sampled_from([0, 1, 5]))
+def test_select_property(data, v, d, mc_pow, x):
+    mc = 1 << mc_pow
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    r = np.random.default_rng(seed)
+    nbr = r.integers(-1, mc + 4, (v, d)).astype(np.int32)
+    active = r.random(v) < 0.9
+    rand = r.integers(0, 2**32, v, dtype=np.uint32)
+    got = np.asarray(ops.color_select(nbr, active, rand, max_colors=mc, x=x))
+    if x == 0:
+        want = np.asarray(ref.first_fit(jnp.asarray(nbr),
+                                        jnp.asarray(active), mc))
+    else:
+        want = np.asarray(ref.random_x(jnp.asarray(nbr), jnp.asarray(active),
+                                       jnp.asarray(rand), x, mc))
+    np.testing.assert_array_equal(got, want)
+    # invariants: inactive rows 0; active rows never pick a neighbour color
+    assert (got[~active] == 0).all()
+    for i in np.nonzero(active)[0]:
+        valid_nbrs = nbr[i][(nbr[i] > 0) & (nbr[i] < mc)]
+        if got[i] < mc - 1:
+            assert got[i] not in valid_nbrs

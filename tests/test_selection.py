@@ -1,0 +1,82 @@
+"""Bitset color-selection primitives vs python reference (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel
+
+
+def py_first_zero(words):
+    bits = []
+    for w in words:
+        for b in range(32):
+            bits.append((int(w) >> b) & 1)
+    for i, bit in enumerate(bits):
+        if not bit:
+            return i
+    return len(bits) - 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=8))
+def test_find_first_zero(words):
+    w = jnp.asarray(np.array(words, dtype=np.uint32))
+    got = int(sel.find_first_zero(w))
+    assert got == py_first_zero(words)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 127), st.lists(st.integers(0, 2**32 - 1), min_size=4,
+                                     max_size=4))
+def test_set_bit(c, words):
+    w = jnp.asarray(np.array(words, dtype=np.uint32))
+    got = np.asarray(sel.set_bit(w, jnp.int32(c)))
+    want = np.array(words, dtype=np.uint32)
+    want[c // 32] |= np.uint32(1 << (c % 32))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 127), st.lists(st.integers(0, 2**32 - 1), min_size=4,
+                                     max_size=4))
+def test_mask_below(c, words):
+    w = jnp.asarray(np.array(words, dtype=np.uint32))
+    got = np.asarray(sel._mask_below(w, jnp.int32(c)))
+    for bit in range(128):
+        before = (int(words[bit // 32]) >> (bit % 32)) & 1
+        after = (int(got[bit // 32]) >> (bit % 32)) & 1
+        assert after == (1 if bit < c else before)
+
+
+def test_staggered_wraps():
+    # all colors below offset taken, above free -> picks first >= offset
+    words = jnp.zeros((2,), jnp.uint32).at[0].set(jnp.uint32(0xFFFFFFFF))
+    assert int(sel.staggered(words, jnp.int32(40))) == 40
+    # everything >= offset taken -> wraps to global first fit
+    words = jnp.asarray(np.array([0x1, 0xFFFFFFFF], np.uint32))
+    assert int(sel.staggered(words, jnp.int32(32))) == 1
+
+
+def test_least_used_prefers_open_colors():
+    usage = jnp.asarray(np.array([0, 5, 2, 0, 7] + [0] * 59, np.int32))
+    words = jnp.zeros((2,), jnp.uint32).at[0].set(jnp.uint32(0b1))  # only c0 forbidden
+    # among open colors {1,2,4}: usage 5,2,7 -> picks 2
+    assert int(sel.least_used(words, usage)) == 2
+    # if every open color is forbidden -> first fit
+    words2 = jnp.asarray(np.array([0b10110111, 0], np.uint32))
+    got = int(sel.least_used(words2, usage))
+    assert got == sel.find_first_zero(words2)
+
+
+def test_random_x_uniformity():
+    """Random-X picks roughly uniformly among the X smallest free colors."""
+    words = jnp.zeros((2,), jnp.uint32).at[0].set(jnp.uint32(0b1))
+    key = jax.random.key(0)
+    draws = []
+    for i in range(600):
+        r = jax.random.bits(jax.random.fold_in(key, i), (), jnp.uint32)
+        draws.append(int(sel.random_x(words, 5, r)))
+    vals, counts = np.unique(draws, return_counts=True)
+    assert set(vals) == {1, 2, 3, 4, 5}
+    assert counts.min() > 60  # ~120 each
