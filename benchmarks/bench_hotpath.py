@@ -1,0 +1,139 @@
+"""Old scalar/dense hot paths vs the ELL/bitset rework (sim backend).
+
+Measures, on the RMAT bench graph (rmat_good; scale 12 fast / 14 full):
+
+  recolor      — the seed dense-occupancy step loop (kept here as a local
+                 legacy reference; it scatters the whole edge list into an
+                 O(V * max_colors) boolean matrix every color step) vs the
+                 chunked ELL + bitset `recolor_sim` hot path.
+  speculative  — sequential scalar supersteps (`parallel_chunk=False`, the
+                 paper-faithful mode) vs tile-parallel supersteps.
+
+Emits CSV rows and writes BENCH_hotpath.json (vertices-colored-per-second)
+so the perf trajectory is recorded across PRs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ColorConfig, RecolorConfig, color_graph_sim,
+                        colors_from_views, compute_order, ordering,
+                        partition_graph, recolor_sim, rmat)
+from repro.core.comm import AxisComm, exchange_boundary, run_sim
+from repro.core.recolor import (_needed_exchanges, class_sizes,
+                                permutation_rank)
+
+from .common import emit
+
+P = 4
+MC = 512
+REPEAT = 5
+
+
+def _recolor_spmd_legacy(arrs, view, key, perm_kind, cfg: RecolorConfig):
+    """The seed recolor step loop: dense occupancy scatter + argmin."""
+    comm = AxisComm()
+    n_local_max = arrs["indptr"].shape[0] - 1
+    n_slots = arrs["prio"].shape[0]
+    mc = cfg.max_colors
+
+    sizes = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
+    n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
+    rank = permutation_rank(sizes, perm_kind, key)
+    step_of = rank[view].at[n_slots - 1].set(0)
+    needed = _needed_exchanges(step_of, arrs, n_local_max, n_classes, mc,
+                               comm, cfg.piggyback)
+    exchange = partial(exchange_boundary, boundary=arrs["boundary"],
+                       ghost_owner=arrs["ghost_owner"],
+                       ghost_slot=arrs["ghost_slot"],
+                       n_local_max=n_local_max, comm=comm)
+    src, dst = arrs["edge_src"], arrs["indices"]
+    valid_local = jnp.arange(n_local_max) < arrs["n_local"]
+
+    def step_body(t, carry):
+        new_view, n_ex = carry
+        occ = jnp.zeros((n_local_max + 1, mc), bool).at[
+            src, new_view[dst]].max(True)
+        occ = occ[:n_local_max].at[:, 0].set(True)
+        first_free = jnp.argmin(occ, axis=1).astype(jnp.int32)
+        active = (step_of[:n_local_max] == t) & valid_local
+        new_local = jnp.where(active, first_free, new_view[:n_local_max])
+        new_view = jax.lax.dynamic_update_slice(
+            new_view, new_local.astype(new_view.dtype), (0,))
+        do_ex = needed[jnp.minimum(t, mc)] | (t == n_classes)
+        new_view = jax.lax.cond(do_ex, exchange, lambda v: v, new_view)
+        return new_view, n_ex + do_ex.astype(jnp.int32)
+
+    new_view, _ = jax.lax.fori_loop(
+        1, n_classes + 1, step_body,
+        (jnp.zeros((n_slots,), jnp.int32), jnp.int32(0)))
+    return new_view
+
+
+def _timeit(fn, *args):
+    jax.block_until_ready(fn(*args))          # warmup / compile
+    t0 = time.time()
+    for _ in range(REPEAT):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return out, (time.time() - t0) / REPEAT
+
+
+def run(fast: bool = True, out_path: str | Path = "BENCH_hotpath.json"):
+    scale = 12 if fast else 14
+    g = rmat.rmat_good(scale, 8, seed=1)
+    pg = partition_graph(g, P)
+    order = compute_order(pg, ordering.NATURAL)
+    rec: dict = dict(graph=f"rmat_good_s{scale}", n=g.n, m=g.m, P=P,
+                     max_colors=MC, repeat=REPEAT)
+
+    # --- speculative: sequential scalar vs tile-parallel supersteps --------
+    seq_cfg = ColorConfig(max_colors=MC, superstep=512, parallel_chunk=False)
+    par_cfg = ColorConfig(max_colors=MC, superstep=512, parallel_chunk=True)
+    view_seq, t_seq = _timeit(lambda: color_graph_sim(pg, order, seq_cfg)[0])
+    view_par, t_par = _timeit(lambda: color_graph_sim(pg, order, par_cfg)[0])
+    rec["speculative"] = dict(
+        sequential_s=t_seq, parallel_s=t_par, speedup=t_seq / t_par,
+        sequential_vps=g.n / t_seq, parallel_vps=g.n / t_par,
+        n_colors_sequential=int(colors_from_views(pg, np.asarray(view_seq)).max()),
+        n_colors_parallel=int(colors_from_views(pg, np.asarray(view_par)).max()),
+    )
+    emit("hotpath/speculative/sequential", t_seq * 1e6,
+         f"vps={g.n/t_seq:,.0f}")
+    emit("hotpath/speculative/parallel", t_par * 1e6,
+         f"vps={g.n/t_par:,.0f};speedup={t_seq/t_par:.2f}x")
+
+    # --- recolor: legacy dense occupancy vs chunked ELL bitset -------------
+    rcfg = RecolorConfig(max_colors=MC)
+    key = jax.random.key(7)
+    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    legacy = jax.jit(lambda a, v, k: run_sim(
+        partial(_recolor_spmd_legacy, perm_kind="nd", cfg=rcfg),
+        P, (a, v), (k,)))
+    v_leg, t_leg = _timeit(lambda: legacy(arrs, jnp.asarray(view_seq), key))
+    v_new, t_new = _timeit(
+        lambda: recolor_sim(pg, view_seq, "nd", rcfg, key=key)[0])
+    same = bool((colors_from_views(pg, np.asarray(v_leg))
+                 == colors_from_views(pg, np.asarray(v_new))).all())
+    rec["recolor"] = dict(
+        legacy_s=t_leg, ell_s=t_new, speedup=t_leg / t_new,
+        legacy_vps=g.n / t_leg, ell_vps=g.n / t_new,
+        colorings_identical=same,
+    )
+    emit("hotpath/recolor/legacy_dense", t_leg * 1e6, f"vps={g.n/t_leg:,.0f}")
+    emit("hotpath/recolor/ell_bitset", t_new * 1e6,
+         f"vps={g.n/t_new:,.0f};speedup={t_leg/t_new:.2f}x;identical={same}")
+
+    Path(out_path).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig5/6/7  distributed scaling: FSS vs +RC vs +aRC, multi-iteration RC
   fig8910   Random-X Fit time-quality trade-off, "speed"/"quality" presets
   kernel    color-selection kernels (oracle timing + pallas validation)
+  hotpath   legacy scalar/dense vs ELL/bitset hot paths (BENCH_hotpath.json)
   roofline  per-(arch x shape x mesh) roofline terms from the dry-run
 """
 import argparse
@@ -21,16 +22,16 @@ def main() -> None:
                     help="paper-scale graphs (slow); default is fast mode")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,seq,piggyback,dist,randomx,"
-                         "kernels,roofline")
+                         "kernels,hotpath,roofline")
     args = ap.parse_args()
     fast = not args.full
-    from benchmarks import (bench_distributed, bench_kernels,
+    from benchmarks import (bench_distributed, bench_hotpath, bench_kernels,
                             bench_piggyback, bench_randomx, bench_roofline,
                             bench_seq_recolor, bench_tables)
     mods = dict(tables=bench_tables, seq=bench_seq_recolor,
                 piggyback=bench_piggyback, dist=bench_distributed,
                 randomx=bench_randomx, kernels=bench_kernels,
-                roofline=bench_roofline)
+                hotpath=bench_hotpath, roofline=bench_roofline)
     chosen = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")
     for name in chosen:

@@ -8,7 +8,11 @@ Public API:
   recolor_iterations, schedule_for_iteration     — ND-RAND%x schedules
   message_stats                                  — piggybacking accounting
   presets.speed / presets.quality                — the paper's parameter sets
+  select_colors                                  — shared bitset color-selection
+                                                   entry (Pallas/XLA backends)
 """
+from repro.kernels.ops import select_colors
+
 from . import ordering, presets, rmat, selection
 from .comm import AXIS, AxisComm
 from .graph import Graph, PartitionedGraph, partition_graph
@@ -28,5 +32,5 @@ __all__ = [
     "color_spmd", "colors_from_views", "compute_order", "message_stats",
     "ordering", "partition_graph", "presets", "recolor_iterations",
     "recolor_sharded", "recolor_sim", "rmat", "schedule_for_iteration",
-    "selection",
+    "select_colors", "selection",
 ]

@@ -84,8 +84,9 @@ def exchange_boundary(view: jnp.ndarray, boundary: jnp.ndarray,
     Ships only boundary colors: payload (max_b,), all-gathered to (P, max_b);
     ghost slots refresh with one gather. This is the collective realization of
     the paper's boundary messages. ``wire_dtype=jnp.int16`` halves the ICI
-    bytes (colors are bounded by max_colors << 32767) — a beyond-paper
-    optimization measured in EXPERIMENTS.md §Perf C.
+    bytes (colors are bounded by max_colors <= 32767, config-asserted) — a
+    beyond-paper optimization; see DESIGN.md §5 and the collective byte
+    counts recorded by ``launch/dryrun.py --coloring``.
     """
     payload = view[boundary]                      # (max_b,)
     if wire_dtype is not None:

@@ -14,6 +14,12 @@ into a leading-P axis for `SimComm`/`shard_map`):
               | sentinel slot (always color 0)  at index n_slots-1
 
   ``indices`` holds slot ids; padded entries point at the sentinel.
+  ``nbr`` is the same adjacency in padded-neighbor (ELL) form: one
+  ``(n_local_max, maxd)`` row of slot ids per vertex, padded with the sentinel
+  slot, so a tile of vertices gathers its whole neighbourhood with one
+  ``view[nbr[rows]]`` — the layout the bitset selection kernels consume
+  (DESIGN.md §3). ELL trades ``n_local_max * maxd`` storage for gather-only
+  (scatter-free) hot loops; ``maxd`` is the max degree over all processors.
   ``boundary`` lists local boundary slots; the *exchange payload* of processor
   p is ``view[boundary]`` — only boundary colors ever travel, the TPU analogue
   of the paper's neighbour-to-neighbour boundary messages.
@@ -83,12 +89,14 @@ class PartitionedGraph:
     max_ghost: int
     max_boundary: int
     m_local_max: int
+    maxd: int
     offs: np.ndarray           # (P+1,) block boundaries in global ids
     n_local: np.ndarray        # (P,)
     n_ghost: np.ndarray        # (P,)
     n_boundary: np.ndarray     # (P,)
     indptr: np.ndarray         # (P, n_local_max+1)
     indices: np.ndarray        # (P, m_local_max) slot ids, pad=sentinel
+    nbr: np.ndarray            # (P, n_local_max, maxd) ELL slot ids, pad=sentinel
     edge_src: np.ndarray       # (P, m_local_max) local row per edge, pad=n_local_max
     boundary: np.ndarray       # (P, max_boundary) local slots, pad=sentinel
     ghost_owner: np.ndarray    # (P, max_ghost)
@@ -112,6 +120,7 @@ class PartitionedGraph:
             n_local=self.n_local.astype(np.int32),
             indptr=self.indptr,
             indices=self.indices,
+            nbr=self.nbr,
             edge_src=self.edge_src,
             boundary=self.boundary,
             ghost_owner=self.ghost_owner,
@@ -234,15 +243,26 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     # numbering which already starts at n_local_max) and pad
     indices = _pad2(rows_indices, m_local_max, sentinel)
     edge_src = _pad2(rows_src, m_local_max, n_local_max)
+
+    # ELL form of the same adjacency: nbr[p, v, k] = k-th neighbour slot of v,
+    # padded with the sentinel (color 0, ignored by the selection kernels).
+    maxd = max(1, max(int(r.max(initial=0)) for r in rows_indptr))
+    nbr = np.full((P, n_local_max, maxd), sentinel, dtype=np.int32)
+    for p in range(P):
+        deg_p = rows_indptr[p].astype(np.int64)
+        starts = np.concatenate([[0], np.cumsum(deg_p)])[:-1]
+        row = rows_src[p].astype(np.int64)
+        col = np.arange(len(row), dtype=np.int64) - starts[row]
+        nbr[p, row, col] = rows_indices[p]
     boundary = _pad2(rows_boundary, max_boundary, sentinel)
     ghost_owner = _pad2(rows_gowner, max_ghost, 0)
     ghost_slot = _pad2(gslot_rows, max_ghost, 0)
 
     return PartitionedGraph(
         P=P, n_global=g.n, n_local_max=n_local_max, max_ghost=max_ghost,
-        max_boundary=max_boundary, m_local_max=m_local_max, offs=offs,
-        n_local=n_local, n_ghost=n_ghost, n_boundary=n_boundary,
-        indptr=indptr, indices=indices, edge_src=edge_src, boundary=boundary,
-        ghost_owner=ghost_owner, ghost_slot=ghost_slot, gvid=gvid, prio=prio,
-        is_internal=is_internal, degree=degree,
+        max_boundary=max_boundary, m_local_max=m_local_max, maxd=maxd,
+        offs=offs, n_local=n_local, n_ghost=n_ghost, n_boundary=n_boundary,
+        indptr=indptr, indices=indices, nbr=nbr, edge_src=edge_src,
+        boundary=boundary, ghost_owner=ghost_owner, ghost_slot=ghost_slot,
+        gvid=gvid, prio=prio, is_internal=is_internal, degree=degree,
     )

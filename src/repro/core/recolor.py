@@ -6,6 +6,16 @@ set, so the step is *fully data-parallel* (vectorized over the class on TPU,
 no intra-step ordering) and the procedure is conflict-free by construction;
 distributed RC equals sequential RC for the same seed coloring (§3, tested).
 
+The step loop is *work-efficient* (DESIGN.md §4): vertices are sorted by
+class step once, and each step processes only its own class as fixed-size
+chunks of the sorted order — an ELL-row gather of neighbour colors followed
+by bitset first-fit through ``kernels.ops.select_colors`` (Pallas on TPU,
+the same math vectorized under XLA elsewhere).  Total selection work per
+iteration is O(V · maxd / 32) words instead of the K · O(V · max_colors)
+bytes a per-step dense occupancy would scatter.  Chunk counts per class are
+pmax-reduced, so every shard runs the same loop trip count and the collective
+schedule stays uniform (a shard_map requirement).
+
 Color-class permutations (§3): RV (reverse), NI (non-increasing class size),
 ND (non-decreasing — the paper's best), RAND (Knuth shuffle), and the hybrid
 schedules ND-RAND%x / ND-RAND%2^i handled by `recolor_iterations`.
@@ -29,9 +39,12 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 from .comm import AXIS, AxisComm, exchange_boundary, run_sharded, run_sim
 from .graph import PartitionedGraph
-from .speculative import ColorConfig, _compact_order, color_spmd
+from .speculative import (ColorConfig, _compact_order, color_spmd,
+                          validate_color_bounds)
 
 RV = "rv"
 NI = "ni"
@@ -47,7 +60,13 @@ class RecolorConfig:
     max_colors: int = 1024         # bound on colors of the SEED coloring
     piggyback: bool = True         # paper §3.1 (False = exchange every step)
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
+    chunk: int = 256               # vertices selected per chunk (ELL tile rows)
+    backend: str = "auto"          # kernels.ops backend: auto | xla | pallas
     seed: int = 0
+
+    def __post_init__(self):
+        validate_color_bounds(self.max_colors, self.wire16, self.backend)
+        assert self.chunk > 0
 
     @property
     def n_words(self) -> int:
@@ -123,15 +142,24 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
 
     `view` is a valid coloring (n_slots,) with fresh ghosts. Returns the new
     view plus stats (colors, executed/possible exchanges).
+
+    Hot loop: vertices are sorted by class step; each class is consumed as
+    <= ceil(pmax(class size)/chunk) fixed-size chunks.  A chunk gathers its
+    ELL neighbour rows, gathers their current colors, and first-fit-colors
+    the whole chunk at once through ``kernels.ops.select_colors`` — no dense
+    occupancy, no scatter over the edge list.  Chunk order within a class is
+    irrelevant (a class is an independent set), and the chunk schedule is
+    identical on every shard, so collectives stay uniform.
     """
     comm = AxisComm()
     n_local_max = arrs["indptr"].shape[0] - 1
     n_slots = arrs["prio"].shape[0]
     n_local = arrs["n_local"]
+    nbr = arrs["nbr"]
     mc = cfg.max_colors
+    chunk = cfg.chunk
 
     sizes = class_sizes(view, n_local, n_local_max, mc, comm)
-    K = jnp.max(jnp.where(sizes > 0, jnp.arange(mc), 0)).astype(jnp.int32)
     n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
     rank = permutation_rank(sizes, perm_kind, key)
     step_of = rank[view]                              # (n_slots,) step per slot
@@ -146,28 +174,48 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
                        n_local_max=n_local_max, comm=comm,
                        wire_dtype=jnp.int16 if cfg.wire16 else None)
 
-    src, dst = arrs["edge_src"], arrs["indices"]
     valid_local = jnp.arange(n_local_max) < n_local
+    step_loc = step_of[:n_local_max]
 
-    def step_body(t, carry):
+    # Step-sorted visit order + per-class chunk schedule.  rank values of
+    # present classes are contiguous 1..n_classes, so classes t=1..n_classes
+    # each get >= 1 chunk (pmax over shards keeps the trip count uniform).
+    sort_key = jnp.where(valid_local, step_loc, jnp.int32(mc + 1))
+    sorted_rows = jnp.argsort(sort_key).astype(jnp.int32)
+    sorted_pad = jnp.concatenate([sorted_rows, jnp.zeros((chunk,), jnp.int32)])
+    local_sizes = jnp.zeros((mc + 2,), jnp.int32).at[sort_key].add(1)[:mc + 1]
+    start_local = jnp.cumsum(local_sizes) - local_sizes   # exclusive cumsum
+    max_sizes = comm.pmax(local_sizes)
+    chunks_per_class = (max_sizes + chunk - 1) // chunk
+    t_arange = jnp.arange(mc + 1)
+    chunks_per_class = jnp.where(
+        (t_arange >= 1) & (t_arange <= n_classes),
+        jnp.maximum(chunks_per_class, 1), 0)
+    cum = jnp.cumsum(chunks_per_class)     # cum[t] = chunks through class t
+
+    def chunk_body(ci, carry):
         new_view, n_ex = carry
-        # forbidden occupancy from already-recolored neighbours (cols 0..mc-1)
-        occ = jnp.zeros((n_local_max + 1, mc), bool).at[src, new_view[dst]].max(True)
-        occ = occ[:n_local_max].at[:, 0].set(True)
-        first_free = jnp.argmin(occ, axis=1).astype(jnp.int32)  # first False
-        active = (step_of[:n_local_max] == t) & valid_local
-        new_local = jnp.where(active, first_free, new_view[:n_local_max])
-        new_view = jax.lax.dynamic_update_slice(
-            new_view, new_local.astype(new_view.dtype), (0,))
-        do_ex = needed[jnp.minimum(t, mc)] | (t == n_classes)
+        t = jnp.searchsorted(cum, ci, side="right").astype(jnp.int32)
+        j = ci - (cum[t] - chunks_per_class[t])          # chunk # within class
+        pos = start_local[t] + j * chunk
+        active = jnp.arange(chunk, dtype=jnp.int32) < local_sizes[t] - j * chunk
+        rows = jax.lax.dynamic_slice(sorted_pad, (pos,), (chunk,))
+        rows = jnp.where(active, rows, 0)
+        nbr_colors = new_view[nbr[rows]]                 # (chunk, maxd) gather
+        colors = ops.select_colors(nbr_colors, active, max_colors=mc,
+                                   selection=ops.FIRST_FIT,
+                                   backend=cfg.backend)
+        idx = jnp.where(active, rows, n_slots - 1)       # park writes on the
+        val = jnp.where(active, colors, 0)               # sentinel (stays 0)
+        new_view = new_view.at[idx].set(val.astype(new_view.dtype))
+        is_last = (ci + 1) == cum[t]
+        do_ex = is_last & (needed[jnp.minimum(t, mc)] | (t == n_classes))
         new_view = jax.lax.cond(do_ex, exchange, lambda v: v, new_view)
         return new_view, n_ex + do_ex.astype(jnp.int32)
 
-    # rank values of present classes are contiguous 1..n_classes, so the step
-    # loop runs n_classes steps even when the seed coloring has holes.
     new_view0 = jnp.zeros((n_slots,), jnp.int32)
     new_view, n_ex = jax.lax.fori_loop(
-        1, n_classes + 1, step_body, (new_view0, jnp.int32(0)))
+        0, cum[mc], chunk_body, (new_view0, jnp.int32(0)))
 
     local_max = jnp.max(jnp.where(valid_local, new_view[:n_local_max], 0))
     stats = dict(

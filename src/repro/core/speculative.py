@@ -5,17 +5,31 @@ Round structure (all inside one jitted SPMD function):
   while conflicts remain:
     compact uncolored vertices to the front of the visit order
     for each superstep chunk of `superstep` vertices:
-        sequentially greedy-color the chunk (local view, possibly stale ghosts)
+        color the chunk (local view, possibly stale ghosts) — see below
         exchange boundary colors (every `exchange_every` supersteps; =1 is the
         paper's synchronous variant, >1 models asynchronous staleness)
     final boundary exchange
-    detect conflicts on boundary edges; the lower-priority endpoint is
+    detect conflicts on all local edges; the lower-priority endpoint is
     uncolored and queued for the next round (random total order tie-break)
 
-Conflicts can only involve boundary vertices colored speculatively — exactly
-the paper's framework. The same function serves initial coloring (any order,
-any selection strategy incl. Random-X Fit) and the aRC second pass (order
-derived from a previous coloring's classes).
+Chunk coloring has two modes (``ColorConfig.parallel_chunk``):
+
+  parallel (default) — the whole superstep tile colors at once against the
+    stale view: one ELL gather of neighbour colors, then tile-parallel bitset
+    selection through ``kernels.ops.select_colors`` (Pallas on TPU).  Vertices
+    inside one chunk cannot see each other, so same-chunk neighbours may
+    conflict — that is *legal* in the speculative framework, and the existing
+    round loop repairs it (the highest-priority endpoint always survives, so
+    every round makes progress).  This is the bulk-synchronous shape of
+    Bogle & Slota / Rokos et al. and the fast path on wide SIMD hardware.
+  sequential — the paper-faithful scalar loop: one vertex at a time inside the
+    chunk, each seeing all earlier in-chunk colors (conflicts only ever
+    involve boundary vertices).  Also used for Least-Used selection, whose
+    running usage histogram is inherently sequential.
+
+The same function serves initial coloring (any order, any selection strategy
+incl. Random-X Fit) and the aRC second pass (order derived from a previous
+coloring's classes).
 """
 from __future__ import annotations
 
@@ -25,9 +39,23 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 from . import selection as sel
 from .comm import AXIS, AxisComm, exchange_boundary, run_sharded, run_sim
 from .graph import PartitionedGraph
+
+
+def validate_color_bounds(max_colors: int, wire16: bool, backend: str):
+    """Shared config guards for ColorConfig / RecolorConfig."""
+    assert max_colors % 32 == 0, "max_colors must be 32-aligned"
+    if wire16:
+        # int16 wire payloads carry the color value itself; anything past
+        # int16 range would silently alias colors after the exchange.
+        assert max_colors <= 32767, (
+            f"wire16 carries colors as int16; max_colors="
+            f"{max_colors} exceeds 32767")
+    assert backend in ops.BACKENDS, f"bad backend {backend!r}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,12 +70,30 @@ class ColorConfig:
     exchange_every: int = 1        # 1 = synchronous; k>1 = bounded staleness
     max_rounds: int = 64
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
+    parallel_chunk: bool = True    # tile-parallel supersteps (False = paper's
+                                   # sequential scalar loop, bitwise-preserved)
+    tile: int = 128                # vertices colored simultaneously within a
+                                   # superstep; bounds speculative conflicts
+                                   # while `superstep` keeps the comm cadence
+    backend: str = "auto"          # kernels.ops backend: auto | xla | pallas
     seed: int = 0
+
+    def __post_init__(self):
+        validate_color_bounds(self.max_colors, self.wire16, self.backend)
+        assert self.tile > 0
 
     @property
     def n_words(self) -> int:
-        assert self.max_colors % 32 == 0
         return self.max_colors // 32
+
+    @property
+    def use_parallel_chunk(self) -> bool:
+        """Least-Used chases a running histogram -> stays sequential."""
+        return self.parallel_chunk and self.selection != sel.LEAST_USED
+
+    def stagger_offset(self, p_idx):
+        """Staggered First Fit start color of processor ``p_idx``."""
+        return (p_idx * self.stagger_estimate) % self.max_colors
 
 
 def _forbidden_words(view, indptr, indices, v, n_words):
@@ -64,8 +110,7 @@ def _pick_color(words, usage, v_rand, p_idx, cfg: ColorConfig):
     if cfg.selection == sel.FIRST_FIT:
         return sel.first_fit(words)
     if cfg.selection == sel.STAGGERED:
-        offset = (p_idx * cfg.stagger_estimate) % cfg.max_colors
-        return sel.staggered(words, offset)
+        return sel.staggered(words, cfg.stagger_offset(p_idx))
     if cfg.selection == sel.LEAST_USED:
         return sel.least_used(words, usage)
     if cfg.selection == sel.RANDOM_X:
@@ -96,18 +141,58 @@ def _greedy_chunk(view, usage, order, rand_u32, start, count, arrs, p_idx,
     return jax.lax.fori_loop(start, start + count, body, (view, usage))
 
 
-def _detect_conflicts(view, arrs, n_local_max):
-    """Uncolor the lower-priority endpoint of every same-color edge."""
-    src, dst, prio = arrs["edge_src"], arrs["indices"], arrs["prio"]
-    view_rows = jnp.concatenate([view[:n_local_max], jnp.zeros((1,), view.dtype)])
-    prio_rows = jnp.concatenate(
-        [prio[:n_local_max], jnp.full((1,), -1, prio.dtype)])
-    c_src = view_rows[src]
-    c_dst = view[dst]
-    same = (c_src == c_dst) & (c_src > 0)
-    lose = same & (prio[dst] > prio_rows[src])
-    conf = jnp.zeros((n_local_max + 1,), bool).at[src].max(lose)[:n_local_max]
-    new_local = jnp.where(conf, 0, view[:n_local_max])
+def _parallel_chunk(view, usage, order_pad, rand_u32, start, arrs, p_idx,
+                    cfg: ColorConfig):
+    """Color one superstep as tile-parallel sub-tiles against the stale view.
+
+    Each sub-tile of ``cfg.tile`` vertices colors at once: one ELL-row gather
+    + one bitset selection through ``kernels.ops.select_colors``.  The view
+    updates between sub-tiles (so speculative conflicts stay bounded by the
+    tile width), while boundary exchanges keep the ``superstep`` cadence —
+    the tile is a hardware knob, the superstep the paper's comm knob.
+    Conflicts within a tile are repaired by the round loop.  ``order_pad`` is
+    the visit order padded by ``superstep`` entries of -1 so slices never
+    clamp into unvisited territory.
+    """
+    n_slots = view.shape[0]
+    tile = min(cfg.tile, cfg.superstep)
+    n_tiles = -(-cfg.superstep // tile)
+    offset = cfg.stagger_offset(p_idx)
+
+    def tile_body(ti, carry):
+        view, usage = carry
+        chunk = jax.lax.dynamic_slice(order_pad, (start + ti * tile,), (tile,))
+        v_safe = jnp.maximum(chunk, 0)
+        active = (chunk >= 0) & (view[v_safe] == 0)
+        nbr_colors = view[arrs["nbr"][v_safe]]       # (tile, maxd)
+        colors = ops.select_colors(
+            nbr_colors, active, rand_u32[v_safe], max_colors=cfg.max_colors,
+            selection=cfg.selection, x=cfg.random_x, offset=offset,
+            backend=cfg.backend)
+        colors = jnp.minimum(colors, cfg.max_colors - 1).astype(jnp.int32)
+        idx = jnp.where(active, v_safe, n_slots - 1)   # park writes on the
+        val = jnp.where(active, colors, 0)             # sentinel (stays 0)
+        view = view.at[idx].set(val.astype(view.dtype))
+        usage = usage.at[jnp.where(active, colors, 0)].add(
+            active.astype(jnp.int32))
+        return view, usage
+
+    return jax.lax.fori_loop(0, n_tiles, tile_body, (view, usage))
+
+
+def _detect_conflicts(view, arrs, n_local_max, backend="auto"):
+    """Uncolor the lower-priority endpoint of every same-color edge.
+
+    Gather-only on the ELL layout (one row per local vertex) routed through
+    the shared conflict kernel — no scatter over the edge list.
+    """
+    nbr, prio = arrs["nbr"], arrs["prio"]
+    my_color = view[:n_local_max]
+    my_prio = prio[:n_local_max]
+    conf = ops.detect_conflicts(my_color, my_prio, view[nbr], prio[nbr],
+                                jnp.ones((n_local_max,), bool),
+                                backend=backend)
+    new_local = jnp.where(conf, 0, my_color)
     view = jax.lax.dynamic_update_slice(view, new_local.astype(view.dtype), (0,))
     return view, jnp.sum(conf, dtype=jnp.int32)
 
@@ -143,19 +228,27 @@ def color_spmd(arrs, order, key, cfg: ColorConfig):
         n_steps = (n_need_max + cfg.superstep - 1) // cfg.superstep
         rkey = jax.random.fold_in(jax.random.fold_in(key, rnd), p_idx)
         rand_u32 = jax.random.bits(rkey, (n_slots,), jnp.uint32)
+        order_pad = jnp.concatenate(
+            [order_r, jnp.full((cfg.superstep,), -1, order_r.dtype)])
 
         def superstep(si, carry):
             view, usage, n_ex = carry
-            view, usage = _greedy_chunk(view, usage, order_r, rand_u32,
-                                        si * cfg.superstep, cfg.superstep,
-                                        arrs, p_idx, cfg)
+            if cfg.use_parallel_chunk:
+                view, usage = _parallel_chunk(view, usage, order_pad,
+                                              rand_u32, si * cfg.superstep,
+                                              arrs, p_idx, cfg)
+            else:
+                view, usage = _greedy_chunk(view, usage, order_r, rand_u32,
+                                            si * cfg.superstep, cfg.superstep,
+                                            arrs, p_idx, cfg)
             do_ex = ((si + 1) % cfg.exchange_every == 0) | (si == n_steps - 1)
             view = jax.lax.cond(do_ex, exchange, lambda v: v, view)
             return view, usage, n_ex + do_ex.astype(jnp.int32)
 
         view, usage, n_ex = jax.lax.fori_loop(
             0, n_steps, superstep, (view, usage, n_ex))
-        view, n_conf = _detect_conflicts(view, arrs, n_local_max)
+        view, n_conf = _detect_conflicts(view, arrs, n_local_max,
+                                         backend=cfg.backend)
         view = exchange(view)
         n_conf = comm.psum(n_conf)
         return view, usage, rnd + 1, n_conf, n_ex + 1

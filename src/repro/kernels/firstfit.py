@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the paper's per-vertex hot loop (color selection).
 
 The recoloring step's compute kernel is: for a tile of vertices, build the
-forbidden-color set from neighbour colors and pick a color (First Fit or
-Random-X Fit, §3.2). On TPU we tile vertices onto VPU lanes and keep the
+forbidden-color set from neighbour colors and pick a color (First Fit,
+Random-X Fit §3.2, or Staggered First Fit via a per-row offset operand).
+On TPU we tile vertices onto VPU lanes and keep the
 forbidden set as a uint32 *bitset* — ``max_colors / 32`` words per vertex —
 resident in VMEM/VREGs:
 
@@ -77,28 +78,55 @@ def _set_bits(words: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return words | jnp.where(warange == w, bit, jnp.uint32(0))
 
 
-def _select_kernel(nbr_ref, active_ref, rand_ref, out_ref, *, n_words: int,
-                   x: int):
-    """x == 0 -> First Fit; x > 0 -> Random-X Fit."""
-    words = _forbidden_words(nbr_ref[...], n_words)
+def _mask_below_rows(words: jnp.ndarray, off: jnp.ndarray) -> jnp.ndarray:
+    """Copy of the (V, W) bitset with all bits < off[v] additionally set."""
+    n_words = words.shape[1]
+    warange = jnp.arange(n_words, dtype=jnp.int32)[None, :]
+    widx = (off >> 5)[:, None]
+    rem = (off & 31).astype(jnp.uint32)[:, None]
+    partial = jnp.where(warange == widx, (_U1 << rem) - _U1, jnp.uint32(0))
+    return words | jnp.where(warange < widx, _FULL, jnp.uint32(0)) | partial
+
+
+def select_from_words(words, rand_u32, offset, *, x: int, staggered: bool):
+    """(V, W) forbidden bitset -> (V,) colors.
+
+    The one tile-parallel selection routine: First Fit (x=0), Random-X Fit
+    (x>0, uniform among the X smallest free colors via ``rand_u32``) and
+    Staggered First Fit (first fit from per-row ``offset``, wrapping to plain
+    first fit when exhausted). Shared verbatim by the Pallas tile kernel and
+    the vectorized XLA backend in ``kernels.ops`` — they differ only in how
+    tiles reach the VPU, never in the math.
+    """
+    if staggered:
+        c = _find_first_zero(_mask_below_rows(words, offset))
+        full = c >= words.shape[1] * 32 - 1
+        return jnp.where(full, _find_first_zero(words), c)
     if x == 0:
-        color = _find_first_zero(words)
-    else:
-        mc = n_words * 32
-        tile_v = words.shape[0]
-        cands = jnp.full((tile_v, x), mc - 1, jnp.int32)
+        return _find_first_zero(words)
+    mc = words.shape[1] * 32
+    tile_v = words.shape[0]
+    cands = jnp.full((tile_v, x), mc - 1, jnp.int32)
 
-        def body(k, carry):
-            words, cands = carry
-            c = _find_first_zero(words)
-            cands = cands.at[:, k].set(c)
-            return _set_bits(words, c), cands
+    def body(k, carry):
+        words, cands = carry
+        c = _find_first_zero(words)
+        cands = cands.at[:, k].set(c)
+        return _set_bits(words, c), cands
 
-        _, cands = jax.lax.fori_loop(0, x, body, (words, cands))
-        n_free = jnp.sum((cands < mc - 1).astype(jnp.uint32), axis=1)
-        n_free = jnp.maximum(n_free, _U1)
-        idx = (rand_ref[...] % n_free).astype(jnp.int32)
-        color = jnp.take_along_axis(cands, idx[:, None], axis=1)[:, 0]
+    _, cands = jax.lax.fori_loop(0, x, body, (words, cands))
+    n_free = jnp.sum((cands < mc - 1).astype(jnp.uint32), axis=1)
+    n_free = jnp.maximum(n_free, _U1)
+    idx = (rand_u32 % n_free).astype(jnp.int32)
+    return jnp.take_along_axis(cands, idx[:, None], axis=1)[:, 0]
+
+
+def _select_kernel(nbr_ref, active_ref, rand_ref, off_ref, out_ref, *,
+                   n_words: int, x: int, staggered: bool):
+    """x == 0 -> First Fit; x > 0 -> Random-X Fit; staggered -> offset FF."""
+    words = _forbidden_words(nbr_ref[...], n_words)
+    color = select_from_words(words, rand_ref[...], off_ref[...], x=x,
+                              staggered=staggered)
     out_ref[...] = jnp.where(active_ref[...] != 0, color, 0).astype(jnp.int32)
 
 
@@ -111,31 +139,37 @@ def _conflict_kernel(myc_ref, myp_ref, nbrc_ref, nbrp_ref, active_ref,
     out_ref[...] = (lose & (active_ref[...] != 0)).astype(jnp.int32)
 
 
-def color_select_pallas(nbr_colors, active, rand_u32, *, max_colors: int,
-                        x: int = 0, interpret: bool = False):
+def color_select_pallas(nbr_colors, active, rand_u32, offset=None, *,
+                        max_colors: int, x: int = 0, staggered: bool = False,
+                        interpret: bool = False):
     """Tile-parallel color selection. V must be a multiple of TILE_V.
 
-    nbr_colors (V, MAXD) int32, active (V,) int32/bool, rand_u32 (V,) uint32.
+    nbr_colors (V, MAXD) int32, active (V,) int32/bool, rand_u32 (V,) uint32,
+    offset (V,) int32 (staggered start color; ignored unless ``staggered``).
     Returns (V,) int32 chosen colors (0 where inactive).
     """
     assert max_colors % 32 == 0
     v, maxd = nbr_colors.shape
     assert v % TILE_V == 0, f"V={v} not a multiple of {TILE_V}"
+    if offset is None:
+        offset = jnp.zeros((v,), jnp.int32)
     n_words = max_colors // 32
     grid = (v // TILE_V,)
-    kernel = functools.partial(_select_kernel, n_words=n_words, x=x)
+    kernel = functools.partial(_select_kernel, n_words=n_words, x=x,
+                               staggered=staggered)
+    vec = pl.BlockSpec((TILE_V,), lambda i: (i,))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((TILE_V, maxd), lambda i: (i, 0)),
-            pl.BlockSpec((TILE_V,), lambda i: (i,)),
-            pl.BlockSpec((TILE_V,), lambda i: (i,)),
+            vec, vec, vec,
         ],
-        out_specs=pl.BlockSpec((TILE_V,), lambda i: (i,)),
+        out_specs=vec,
         out_shape=jax.ShapeDtypeStruct((v,), jnp.int32),
         interpret=interpret,
-    )(nbr_colors, active.astype(jnp.int32), rand_u32)
+    )(nbr_colors, active.astype(jnp.int32), rand_u32,
+      offset.astype(jnp.int32))
 
 
 def conflict_pallas(my_color, my_prio, nbr_colors, nbr_prio, active, *,

@@ -1,11 +1,26 @@
-"""Jitted public wrappers around the Pallas color-selection kernels.
+"""Jitted public wrappers around the color-selection kernels.
 
-On CPU (this container) the kernels run with ``interpret=True`` — the kernel
-body executes unmodified in Python, which validates the TPU code path; on a
-real TPU backend pass ``interpret=False`` (default chosen by backend).
+``select_colors`` is the ONE entry point the distributed hot paths
+(`core.recolor`, `core.speculative`) route through.  It takes a padded
+neighbour-color tile (the gather of an ELL row block, see DESIGN.md §3) and
+picks a color per row with a ``backend`` switch:
 
-The wrappers pad the vertex dimension to the kernel tile and accept 0/negative
-neighbour-color padding (ignored per the semantics contract in ref.py).
+  backend="pallas" — the Pallas TPU tile kernels in ``firstfit.py``.  On a
+                     non-TPU backend the kernels run with ``interpret=True``,
+                     which executes the kernel body unmodified in Python and
+                     validates the TPU code path.
+  backend="xla"    — the *same* bitset math (``select_from_words``) applied to
+                     the whole tile as ordinary vectorized XLA ops.  This is
+                     the fast CPU/sim path and the semantics oracle for the
+                     Pallas path; equivalence is pinned by tests.
+  backend="auto"   — "pallas" on TPU, "xla" elsewhere (the default the
+                     drivers use, so sim runs stay fast and TPU runs hit the
+                     kernels without any config change).
+
+Strategies: "first_fit", "staggered" (per-row start offset, wraps to plain
+first fit when exhausted) and "random_x" (uniform among the X smallest free
+colors).  "least_used" is inherently sequential (it chases a running usage
+histogram) and stays on the scalar path in ``core.speculative``.
 """
 from __future__ import annotations
 
@@ -14,11 +29,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .firstfit import TILE_V, color_select_pallas, conflict_pallas
+from .firstfit import (TILE_V, _forbidden_words, color_select_pallas,
+                       conflict_pallas, select_from_words)
+
+# Strategy names, mirroring repro.core.selection (string-equal; duplicated
+# here so kernels never import core and the layering stays one-way).
+FIRST_FIT = "first_fit"
+STAGGERED = "staggered"
+RANDOM_X = "random_x"
+SELECTIONS = (FIRST_FIT, STAGGERED, RANDOM_X)
+
+BACKENDS = ("auto", "xla", "pallas")
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}, want one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
 
 
 def _pad_v(x, v_pad, fill=0):
@@ -26,22 +59,81 @@ def _pad_v(x, v_pad, fill=0):
     return jnp.pad(x, pad, constant_values=fill)
 
 
-@functools.partial(jax.jit, static_argnames=("max_colors", "x", "interpret"))
-def color_select(nbr_colors, active, rand_u32, *, max_colors: int, x: int = 0,
-                 interpret: bool | None = None):
-    """First Fit (x=0) / Random-X Fit (x>0) over a dense neighbour tile.
+def select_colors(nbr_colors, active, rand_u32=None, *, max_colors: int,
+                  selection: str = FIRST_FIT, x: int = 10, offset=None,
+                  backend: str = "auto", interpret: bool | None = None):
+    """Tile-parallel color selection over a padded neighbour tile.
 
-    nbr_colors (V, MAXD) int32; active (V,) bool; rand_u32 (V,) uint32.
+    nbr_colors (V, MAXD) int32 (0 / negative / >=max_colors entries ignored);
+    active (V,) bool-ish; rand_u32 (V,) uint32 (random_x only); offset scalar
+    or (V,) int32 (staggered only).  Returns (V,) int32, 0 where inactive.
+    Traceable — call it from inside jitted SPMD code.
     """
+    if selection not in SELECTIONS:
+        raise ValueError(
+            f"unknown selection {selection!r}, want one of {SELECTIONS}")
+    assert max_colors % 32 == 0
+    backend = resolve_backend(backend)
+    nbr_colors = jnp.asarray(nbr_colors)
+    v = nbr_colors.shape[0]
+    staggered = selection == STAGGERED
+    x_eff = x if selection == RANDOM_X else 0
+    if rand_u32 is None:
+        rand_u32 = jnp.zeros((v,), jnp.uint32)
+    if offset is None:
+        offset = jnp.zeros((v,), jnp.int32)
+    else:
+        offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (v,))
+    active = jnp.asarray(active)
+
+    if backend == "xla":
+        words = _forbidden_words(nbr_colors, max_colors // 32)
+        color = select_from_words(words, rand_u32, offset, x=x_eff,
+                                  staggered=staggered)
+        return jnp.where(active != 0, color, 0).astype(jnp.int32)
+
     if interpret is None:
         interpret = _default_interpret()
-    v = nbr_colors.shape[0]
     v_pad = -(-v // TILE_V) * TILE_V
     out = color_select_pallas(
         _pad_v(nbr_colors, v_pad), _pad_v(active, v_pad),
-        _pad_v(rand_u32, v_pad), max_colors=max_colors, x=x,
+        _pad_v(rand_u32, v_pad), _pad_v(offset, v_pad),
+        max_colors=max_colors, x=x_eff, staggered=staggered,
         interpret=interpret)
     return out[:v]
+
+
+def detect_conflicts(my_color, my_prio, nbr_colors, nbr_prio, active, *,
+                     backend: str = "auto", interpret: bool | None = None):
+    """Tile-parallel conflict detection: row loses iff a neighbour holds the
+    same (nonzero) color with strictly higher priority.  Returns (V,) bool.
+    Traceable; same backend contract as ``select_colors``.
+    """
+    backend = resolve_backend(backend)
+    my_color = jnp.asarray(my_color)
+    active = jnp.asarray(active)
+    if backend == "xla":
+        same = (nbr_colors == my_color[:, None]) & (my_color[:, None] > 0)
+        lose = (same & (nbr_prio > my_prio[:, None])).any(axis=1)
+        return lose & (active != 0)
+    if interpret is None:
+        interpret = _default_interpret()
+    v = my_color.shape[0]
+    v_pad = -(-v // TILE_V) * TILE_V
+    out = conflict_pallas(
+        _pad_v(my_color, v_pad), _pad_v(my_prio, v_pad, fill=-1),
+        _pad_v(nbr_colors, v_pad), _pad_v(nbr_prio, v_pad, fill=-1),
+        _pad_v(active, v_pad), interpret=interpret)
+    return out[:v].astype(bool)
+
+
+@functools.partial(jax.jit, static_argnames=("max_colors", "x", "interpret"))
+def color_select(nbr_colors, active, rand_u32, *, max_colors: int, x: int = 0,
+                 interpret: bool | None = None):
+    """First Fit (x=0) / Random-X Fit (x>0) via the Pallas path (jitted)."""
+    return select_colors(nbr_colors, active, rand_u32, max_colors=max_colors,
+                         selection=RANDOM_X if x else FIRST_FIT, x=x,
+                         backend="pallas", interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -158,7 +158,7 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
                 arrs, view, key)
         compiled_rc = lowered_rc.compile()
         analysis_rc = analyze_hlo(compiled_rc.as_text())
-        # beyond-paper: int16 wire payloads (EXPERIMENTS.md §Perf C)
+        # beyond-paper: int16 wire payloads (DESIGN.md §5)
         rfn16 = partial(recolor_spmd, perm_kind="nd",
                         cfg=RecolorConfig(max_colors=256, wire16=True))
         compiled_rc16 = jax.jit(

@@ -1,6 +1,7 @@
 """Graph substrate: generators, partitioning invariants (unit + property)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Graph, partition_graph, rmat
