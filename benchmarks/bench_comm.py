@@ -1,0 +1,110 @@
+"""Exchange-scheme scaling: sparse neighbour-to-neighbour vs all-gather.
+
+Sweeps simulated P = 2..16 on the RMAT bench graph and records, per scheme
+and per driver (speculative coloring + one ND recoloring iteration):
+
+  - wall time (sim backend — compute cost of the exchange structure),
+  - *measured* wire bytes from the drivers' comm accumulator
+    (`stats["wire_bytes"]`, the bytes an executed exchange actually ships),
+  - modeled bytes per full exchange from the static plan,
+  - a coloring hash per scheme — the two schemes must agree bitwise.
+
+Writes BENCH_comm.json so the comm-volume trajectory is recorded across
+PRs.  The all-gather table grows O(P·max_b) per exchange while the sparse
+schedule tracks the realized cross-edge structure; the gap is the paper's
+"communication scheme that scales gracefully" (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import (ColorConfig, RecolorConfig, color_graph_sim,
+                        colors_from_views, compute_order, ordering,
+                        partition_graph, recolor_sim, rmat)
+from repro.core.comm import allgather_bytes_per_exchange
+
+from .common import emit
+
+MC = 512
+REPEAT = 3
+P_SWEEP = (2, 4, 8, 16)
+
+
+def _hash(colors: np.ndarray) -> str:
+    return hashlib.sha256(colors.astype(np.int32).tobytes()).hexdigest()[:16]
+
+
+def _timeit(fn):
+    jax.block_until_ready(fn()[0])            # warmup / compile
+    t0 = time.time()
+    for _ in range(REPEAT):
+        out = fn()
+        jax.block_until_ready(out[0])
+    return out, (time.time() - t0) / REPEAT
+
+
+def run(fast: bool = True, out_path: str | Path = "BENCH_comm.json"):
+    scale = 12 if fast else 14
+    g = rmat.rmat_good(scale, 8, seed=1)
+    rec: dict = dict(graph=f"rmat_good_s{scale}", n=g.n, m=g.m,
+                     max_colors=MC, repeat=REPEAT, sweep=[])
+
+    for P in P_SWEEP:
+        pg = partition_graph(g, P)
+        plan = pg.comm_plan
+        order = compute_order(pg, ordering.INTERNAL_FIRST)
+        row: dict = dict(
+            P=P,
+            n_rounds=len(plan.shifts),
+            max_boundary=int(pg.max_boundary),
+            max_send=int(plan.max_send),
+            modeled_sparse_bytes_per_ex=plan.bytes_per_exchange(),
+            modeled_allgather_bytes_per_ex=allgather_bytes_per_exchange(
+                P, int(pg.max_boundary)),
+        )
+        hashes = {}
+        for scheme in ("allgather", "sparse"):
+            cfg = ColorConfig(max_colors=MC, superstep=512, seed=0,
+                              scheme=scheme)
+            (view, st), t = _timeit(lambda: color_graph_sim(pg, order, cfg))
+            hashes[scheme] = _hash(colors_from_views(pg, np.asarray(view)))
+            row[f"color_{scheme}_s"] = t
+            row[f"color_{scheme}_wire_bytes"] = st["wire_bytes"]
+            rcfg = RecolorConfig(max_colors=MC, scheme=scheme)
+            key = jax.random.key(7)
+            (v2, st2), t2 = _timeit(
+                lambda: recolor_sim(pg, view, "nd", rcfg, key=key))
+            row[f"recolor_{scheme}_s"] = t2
+            row[f"recolor_{scheme}_wire_bytes"] = st2["wire_bytes"]
+        row["colorings_identical"] = hashes["sparse"] == hashes["allgather"]
+        row["color_hash"] = hashes["sparse"]
+        row["color_speedup"] = row["color_allgather_s"] / row["color_sparse_s"]
+        row["recolor_speedup"] = (row["recolor_allgather_s"]
+                                  / row["recolor_sparse_s"])
+        row["bytes_reduction_color"] = 1.0 - (
+            row["color_sparse_wire_bytes"]
+            / max(row["color_allgather_wire_bytes"], 1))
+        row["bytes_reduction_recolor"] = 1.0 - (
+            row["recolor_sparse_wire_bytes"]
+            / max(row["recolor_allgather_wire_bytes"], 1))
+        rec["sweep"].append(row)
+        emit(f"comm/P{P}/color_sparse", row["color_sparse_s"] * 1e6,
+             f"bytes={row['color_sparse_wire_bytes']};"
+             f"red={row['bytes_reduction_color']:.2f};"
+             f"identical={row['colorings_identical']}")
+        emit(f"comm/P{P}/recolor_sparse", row["recolor_sparse_s"] * 1e6,
+             f"bytes={row['recolor_sparse_wire_bytes']};"
+             f"red={row['bytes_reduction_recolor']:.2f}")
+
+    Path(out_path).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig8910   Random-X Fit time-quality trade-off, "speed"/"quality" presets
   kernel    color-selection kernels (oracle timing + pallas validation)
   hotpath   legacy scalar/dense vs ELL/bitset hot paths (BENCH_hotpath.json)
+  comm      sparse vs all-gather exchange P-scaling sweep (BENCH_comm.json)
   roofline  per-(arch x shape x mesh) roofline terms from the dry-run
 """
 import argparse
@@ -22,16 +23,17 @@ def main() -> None:
                     help="paper-scale graphs (slow); default is fast mode")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,seq,piggyback,dist,randomx,"
-                         "kernels,hotpath,roofline")
+                         "kernels,hotpath,comm,roofline")
     args = ap.parse_args()
     fast = not args.full
-    from benchmarks import (bench_distributed, bench_hotpath, bench_kernels,
-                            bench_piggyback, bench_randomx, bench_roofline,
-                            bench_seq_recolor, bench_tables)
+    from benchmarks import (bench_comm, bench_distributed, bench_hotpath,
+                            bench_kernels, bench_piggyback, bench_randomx,
+                            bench_roofline, bench_seq_recolor, bench_tables)
     mods = dict(tables=bench_tables, seq=bench_seq_recolor,
                 piggyback=bench_piggyback, dist=bench_distributed,
                 randomx=bench_randomx, kernels=bench_kernels,
-                hotpath=bench_hotpath, roofline=bench_roofline)
+                hotpath=bench_hotpath, comm=bench_comm,
+                roofline=bench_roofline)
     chosen = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")
     for name in chosen:

@@ -1,0 +1,58 @@
+"""Version-compat shims over the jax API surface this repo uses.
+
+The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.set_mesh``) but must also run on older containers (0.4.x) where those
+live under experimental names or do not exist:
+
+  shard_map   jax.shard_map (new, ``check_vma``) vs
+              jax.experimental.shard_map.shard_map (old, ``check_rep``)
+  make_mesh   ``axis_types=`` keyword only exists once ``AxisType`` does
+  set_mesh    ``jax.set_mesh(mesh)`` context manager vs ``with mesh:``
+
+Every production entry point (core/comm.py, launch/*, train/trainer.py)
+routes through these three helpers instead of touching the jax names
+directly, so one shim covers the whole repo.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    _shard_map = jax.shard_map
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+# the check_rep -> check_vma rename landed independently of the promotion
+# out of jax.experimental, so detect the kwarg rather than assume
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` with the replication check disabled portably.
+
+    (``check_vma``/``check_rep`` =False: loop carries legitimately start
+    replicated and become worker-varying after the first exchange.)
+    """
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check})
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # old jax: Mesh is itself a context manager

@@ -14,8 +14,9 @@ Public API:
 from repro.kernels.ops import select_colors
 
 from . import ordering, presets, rmat, selection
-from .comm import AXIS, AxisComm
-from .graph import Graph, PartitionedGraph, partition_graph
+from .comm import AXIS, SCHEMES, AxisComm, CommConfig, stats_to_host
+from .graph import (CommPlan, Graph, PartitionedGraph, build_comm_plan,
+                    partition_graph)
 from .ordering import compute_order
 from .piggyback import MessageStats, message_stats
 from .recolor import (ND, NI, RAND, RV, RecolorConfig, arc_sim,
@@ -26,11 +27,12 @@ from .speculative import (ColorConfig, color_graph_sharded, color_graph_sim,
 from .validate import assert_valid, check_coloring, colors_from_views
 
 __all__ = [
-    "AXIS", "AxisComm", "ColorConfig", "Graph", "MessageStats", "ND", "NI",
-    "PartitionedGraph", "RAND", "RV", "RecolorConfig", "arc_sim",
-    "assert_valid", "check_coloring", "color_graph_sharded", "color_graph_sim",
-    "color_spmd", "colors_from_views", "compute_order", "message_stats",
-    "ordering", "partition_graph", "presets", "recolor_iterations",
-    "recolor_sharded", "recolor_sim", "rmat", "schedule_for_iteration",
-    "select_colors", "selection",
+    "AXIS", "AxisComm", "ColorConfig", "CommConfig", "CommPlan", "Graph",
+    "MessageStats", "ND", "NI", "PartitionedGraph", "RAND", "RV",
+    "RecolorConfig", "SCHEMES", "arc_sim", "assert_valid",
+    "build_comm_plan", "check_coloring", "color_graph_sharded",
+    "color_graph_sim", "color_spmd", "colors_from_views", "compute_order",
+    "message_stats", "ordering", "partition_graph", "presets",
+    "recolor_iterations", "recolor_sharded", "recolor_sim", "rmat",
+    "schedule_for_iteration", "select_colors", "selection", "stats_to_host",
 ]

@@ -1,4 +1,4 @@
-"""Communication abstraction: one SPMD code path, two executors.
+"""Communication abstraction: one SPMD code path, two executors, two schemes.
 
 Algorithms in this package are written as *per-shard* SPMD functions that
 communicate exclusively through ``AxisComm`` (named-axis collectives). They
@@ -7,11 +7,24 @@ can then run
 - **simulated** on a single device via ``jax.vmap(..., axis_name=AXIS)`` —
   used for the paper's quality/scaling studies (P up to 512 simulated
   processors on one CPU), and
-- **sharded** on a real device mesh via ``jax.shard_map`` — the production
+- **sharded** on a real device mesh via ``shard_map`` — the production
   path; the multi-pod dry-run lowers exactly this.
 
-This mirrors the paper's MPI structure: an all-gather of boundary-only
-payloads replaces neighbour-to-neighbour boundary messages (see DESIGN.md §2).
+Two interchangeable boundary-exchange schemes (``CommConfig.scheme``) produce
+bitwise-identical colorings:
+
+- ``"allgather"`` — every shard broadcasts its whole boundary payload; the
+  ghost refresh gathers from the (P, max_b) table.  O(P·max_b) wire bytes per
+  exchange regardless of which cross edges exist.
+- ``"sparse"`` — the paper's neighbour-to-neighbour scheme: a static round
+  schedule of ``ppermute`` hops (one per *ring shift* with any traffic, see
+  ``graph.CommPlan``) ships each destination only the boundary colors its
+  ghosts actually read.  Wire bytes scale with the realized cross-edge
+  structure, not with P; a graph with zero cross edges performs zero rounds.
+
+Every exchange returns the per-shard wire bytes it shipped (a traced scalar
+accumulated through the drivers' loop carries), so benchmarks and
+``launch/dryrun.py`` report *measured* comm volume next to the modeled one.
 """
 from __future__ import annotations
 
@@ -22,7 +35,32 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 AXIS = "workers"
+
+ALLGATHER = "allgather"
+SPARSE = "sparse"
+SCHEMES = (ALLGATHER, SPARSE)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Static configuration of the boundary exchange."""
+
+    scheme: str = SPARSE           # "allgather" | "sparse"
+    wire16: bool = False           # int16 payloads (half the wire bytes)
+
+    def __post_init__(self):
+        assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
+
+    @property
+    def wire_dtype(self):
+        return jnp.int16 if self.wire16 else None
+
+    @property
+    def itemsize(self) -> int:
+        return 2 if self.wire16 else 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,12 +75,38 @@ class AxisComm:
     def pmax(self, x):
         return jax.lax.pmax(x, self.axis)
 
+    def pmin(self, x):
+        return jax.lax.pmin(x, self.axis)
+
     def all_gather(self, x):
         """per-shard (…,) -> (P, …) table, identical on every shard."""
         return jax.lax.all_gather(x, self.axis)
 
+    def ppermute(self, x, perm):
+        """Point-to-point shuffle along the axis (source, dest) pairs."""
+        return jax.lax.ppermute(x, self.axis, perm)
+
     def index(self):
         return jax.lax.axis_index(self.axis)
+
+
+def allgather_bytes_per_exchange(P_size: int, max_boundary: int,
+                                 itemsize: int = 4) -> int:
+    """Per-shard wire bytes of one broadcast exchange (ring all-gather:
+    every shard receives the other P-1 payloads of max_b entries).  The one
+    home of the all-gather cost model — the sparse counterpart lives in
+    ``graph.CommPlan.bytes_per_exchange``."""
+    return (P_size - 1) * max_boundary * itemsize
+
+
+def stats_to_host(stats) -> dict:
+    """Device stats dict -> python ints.
+
+    Works for 0-d scalars, per-shard ``(P,)`` stacks from ``run_sim`` and
+    sharded outputs alike: every stat is either shard-uniform (schedules are
+    pmax-reduced) or a quantity whose shard-max is the meaningful summary.
+    """
+    return {k: int(jnp.max(v)) for k, v in stats.items()}
 
 
 def run_sim(fn, P_size: int, sharded_args: tuple, broadcast_args: tuple = ()):
@@ -68,25 +132,21 @@ def run_sharded(fn, mesh, sharded_args: tuple, broadcast_args: tuple = ()):
 
     in_specs = tuple(P(AXIS) for _ in sharded_args) + tuple(
         P() for _ in broadcast_args)
-    # check_vma=False: loop carries (color views, bitsets) legitimately start
-    # replicated and become worker-varying after the first exchange.
-    return jax.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
-                         out_specs=P(AXIS), check_vma=False)(
-                             *sharded_args, *broadcast_args)
+    return compat.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(AXIS), check=False)(
+                                *sharded_args, *broadcast_args)
 
 
 def exchange_boundary(view: jnp.ndarray, boundary: jnp.ndarray,
                       ghost_owner: jnp.ndarray, ghost_slot: jnp.ndarray,
                       n_local_max: int, comm: AxisComm,
                       wire_dtype=None) -> jnp.ndarray:
-    """One boundary-color exchange (the superstep / color-step barrier).
+    """One broadcast boundary-color exchange (all-gather scheme).
 
     Ships only boundary colors: payload (max_b,), all-gathered to (P, max_b);
-    ghost slots refresh with one gather. This is the collective realization of
-    the paper's boundary messages. ``wire_dtype=jnp.int16`` halves the ICI
-    bytes (colors are bounded by max_colors <= 32767, config-asserted) — a
-    beyond-paper optimization; see DESIGN.md §5 and the collective byte
-    counts recorded by ``launch/dryrun.py --coloring``.
+    ghost slots refresh with one gather. ``wire_dtype=jnp.int16`` halves the
+    ICI bytes (colors are bounded by max_colors <= 32767, config-asserted);
+    see DESIGN.md §5.
     """
     payload = view[boundary]                      # (max_b,)
     if wire_dtype is not None:
@@ -95,3 +155,90 @@ def exchange_boundary(view: jnp.ndarray, boundary: jnp.ndarray,
     ghosts = table[ghost_owner, ghost_slot]       # (max_g,)
     return jax.lax.dynamic_update_slice(view, ghosts.astype(view.dtype),
                                         (n_local_max,))
+
+
+def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
+                    ghost_shift: jnp.ndarray, ghost_pos: jnp.ndarray,
+                    shifts: tuple, widths: tuple, P_size: int,
+                    n_local_max: int, comm: AxisComm, wire_dtype=None,
+                    itemsize: int = 4, round_mask=None) -> jnp.ndarray:
+    """One sparse neighbour-to-neighbour exchange (``ppermute`` rounds).
+
+    Round ``r`` ships, for every shard p at once, the ``widths[r]`` boundary
+    colors that destination ``(p + shifts[r]) % P`` actually reads
+    (``send_slot[r]``, sentinel-padded).  The receiver refreshes exactly the
+    ghosts whose owner sits ``shifts[r]`` ring positions behind it
+    (``ghost_shift == shifts[r]``) from position ``ghost_pos`` of the buffer.
+    The schedule (shifts, widths) is static per graph — rounds with zero
+    global traffic do not exist, so a graph with no cross edges exchanges
+    zero bytes.
+
+    ``round_mask`` (optional, (n_rounds,) bool, shard-uniform) lets callers
+    skip rounds no destination currently needs (the sparse form of the
+    paper's piggybacking, see recolor.py); skipped rounds cost no wire bytes.
+    Returns ``(view, wire_bytes)``.
+    """
+    n_ghost_slots = view.shape[0] - n_local_max - 1
+    ghosts = jax.lax.dynamic_slice(view, (n_local_max,), (n_ghost_slots,))
+    total = jnp.int32(0)
+    for r, (k, w) in enumerate(zip(shifts, widths)):
+        perm = [(i, (i + k) % P_size) for i in range(P_size)]
+        mine = ghost_shift == k
+
+        def do_round(args, perm=perm, r=r, w=w, mine=mine):
+            ghosts, total = args
+            payload = view[send_slot[r, :w]]
+            if wire_dtype is not None:
+                payload = payload.astype(wire_dtype)
+            buf = comm.ppermute(payload, perm)
+            vals = buf[jnp.minimum(ghost_pos, w - 1)].astype(ghosts.dtype)
+            return (jnp.where(mine, vals, ghosts),
+                    total + jnp.int32(w * itemsize))
+
+        if round_mask is None:
+            ghosts, total = do_round((ghosts, total))
+        else:
+            ghosts, total = jax.lax.cond(round_mask[r], do_round,
+                                         lambda a: a, (ghosts, total))
+    view = jax.lax.dynamic_update_slice(view, ghosts.astype(view.dtype),
+                                        (n_local_max,))
+    return view, total
+
+
+def make_exchange(arrs, n_local_max: int, P_size: int, comm: AxisComm,
+                  cfg: CommConfig, plan_static):
+    """Build ``exchange(view[, round_mask]) -> (view, wire_bytes)``.
+
+    ``plan_static`` is ``(shifts, widths)`` from ``PartitionedGraph.comm_plan``
+    (hashable, part of the jit cache key).  Under the all-gather scheme the
+    modeled wire bytes are ``(P-1) * max_b * itemsize`` per exchange — what a
+    ring all-gather makes every shard receive; ``round_mask`` is ignored
+    (the broadcast always ships everything).
+    """
+    if cfg.scheme == SPARSE:
+        shifts, widths = plan_static
+
+        def exchange(view, round_mask=None):
+            return exchange_sparse(
+                view, arrs["send_slot"], arrs["ghost_shift"],
+                arrs["ghost_pos"], shifts, widths, P_size, n_local_max,
+                comm, wire_dtype=cfg.wire_dtype, itemsize=cfg.itemsize,
+                round_mask=round_mask)
+
+        return exchange
+
+    max_b = arrs["boundary"].shape[0]
+    if P_size is None:
+        p_count = jax.lax.psum(jnp.int32(1), comm.axis)
+        bytes_per_ex = (p_count - 1) * jnp.int32(max_b * cfg.itemsize)
+    else:
+        bytes_per_ex = jnp.int32(
+            allgather_bytes_per_exchange(P_size, max_b, cfg.itemsize))
+
+    def exchange(view, round_mask=None):
+        view = exchange_boundary(
+            view, arrs["boundary"], arrs["ghost_owner"], arrs["ghost_slot"],
+            n_local_max, comm, wire_dtype=cfg.wire_dtype)
+        return view, bytes_per_ex
+
+    return exchange

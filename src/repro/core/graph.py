@@ -20,16 +20,21 @@ into a leading-P axis for `SimComm`/`shard_map`):
   ``view[nbr[rows]]`` — the layout the bitset selection kernels consume
   (DESIGN.md §3). ELL trades ``n_local_max * maxd`` storage for gather-only
   (scatter-free) hot loops; ``maxd`` is the max degree over all processors.
-  ``boundary`` lists local boundary slots; the *exchange payload* of processor
-  p is ``view[boundary]`` — only boundary colors ever travel, the TPU analogue
-  of the paper's neighbour-to-neighbour boundary messages.
-  Ghost g of processor p is owned by ``ghost_owner[g]`` and lives at position
-  ``ghost_slot[g]`` of that owner's payload, so after an all-gather of
-  payloads P×max_b, ghosts refresh with one gather.
+  ``boundary`` lists local boundary slots; only boundary colors ever travel.
+  Under the broadcast scheme the exchange payload of processor p is
+  ``view[boundary]``: ghost g of processor p is owned by ``ghost_owner[g]``
+  and lives at position ``ghost_slot[g]`` of that owner's payload, so after
+  an all-gather of payloads P×max_b, ghosts refresh with one gather.
+  Under the sparse scheme (``CommPlan``, built by ``build_comm_plan``) each
+  processor instead ships per-destination send lists over a static
+  ``ppermute`` round schedule — the faithful analogue of the paper's
+  neighbour-to-neighbour boundary messages, with wire bytes that track the
+  realized cross-edge structure instead of P (DESIGN.md §2).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -77,6 +82,47 @@ def _pad2(rows: list[np.ndarray], width: int, fill: int) -> np.ndarray:
 
 
 @dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """Static sparse-exchange schedule (paper's neighbour-to-neighbour sends).
+
+    The processor ring is walked by *shift*: in round ``r`` every shard p
+    sends one buffer to ``(p + shifts[r]) % P`` via ``ppermute``.  Only
+    shifts with traffic on at least one ordered pair exist, and every round
+    is padded to its own global width — so both the round count and the
+    bytes scale with the realized cross-edge structure, not with P.
+
+    ``send_slot[p, r]`` lists the local boundary slots whose colors the
+    round-r destination actually reads (its ghosts owned by p, in ascending
+    global id), sentinel-padded to ``widths[r]`` ≤ ``max_send``.  On the
+    receive side, ghost g of shard p was sent by its owner in round
+    ``shift_to_round[ghost_shift[p, g]]`` at buffer position
+    ``ghost_pos[p, g]``.
+    """
+
+    shifts: tuple          # static nonzero ring shifts with any traffic
+    widths: tuple          # per-shift pmax payload width
+    max_send: int          # max(widths), the send_slot pad width
+    n_send: np.ndarray     # (P, P) per-(src, dst) payload counts
+    send_slot: np.ndarray  # (P, n_rounds, max_send) local slots, pad=sentinel
+    ghost_shift: np.ndarray  # (P, max_ghost) ring shift of each ghost, pad=-1
+    ghost_pos: np.ndarray    # (P, max_ghost) position in owner's send row
+    shift_to_round: np.ndarray  # (P, P) shift value -> round index, -1 unused
+
+    @property
+    def static(self) -> tuple:
+        """Hashable (shifts, widths) — part of the jit cache key."""
+        return (self.shifts, self.widths)
+
+    def arrays(self) -> dict[str, np.ndarray]:
+        return dict(send_slot=self.send_slot, ghost_shift=self.ghost_shift,
+                    ghost_pos=self.ghost_pos, shift_to_round=self.shift_to_round)
+
+    def bytes_per_exchange(self, itemsize: int = 4) -> int:
+        """Per-shard wire bytes of one full sparse exchange."""
+        return int(sum(self.widths)) * itemsize
+
+
+@dataclasses.dataclass(frozen=True)
 class PartitionedGraph:
     """Per-processor padded arrays, stacked on a leading P axis (host, numpy).
 
@@ -114,9 +160,24 @@ class PartitionedGraph:
     def sentinel(self) -> int:
         return self.n_slots - 1
 
-    def arrays(self) -> dict[str, np.ndarray]:
-        """Device-ready dict (everything that the JAX kernels consume)."""
-        return dict(
+    @property
+    def n_interior(self) -> np.ndarray:
+        """(P,) count of interior (no ghost neighbour) local vertices."""
+        return self.is_internal.sum(axis=1).astype(np.int32)
+
+    @functools.cached_property
+    def comm_plan(self) -> CommPlan:
+        """Sparse-exchange schedule; built once, cached on the instance."""
+        return build_comm_plan(self)
+
+    def arrays(self, *, sparse: bool = True) -> dict[str, np.ndarray]:
+        """Device-ready dict (everything that the JAX kernels consume).
+
+        ``sparse=False`` (all-gather-only runs) skips building and shipping
+        the sparse-exchange plan arrays — they would be traced-out anyway,
+        but the host-side plan build and host-to-device transfers are not.
+        """
+        out = dict(
             n_local=self.n_local.astype(np.int32),
             indptr=self.indptr,
             indices=self.indices,
@@ -129,6 +190,9 @@ class PartitionedGraph:
             is_internal=self.is_internal,
             degree=self.degree,
         )
+        if sparse:
+            out.update(self.comm_plan.arrays())
+        return out
 
     def gather_global_colors(self, local_colors: np.ndarray) -> np.ndarray:
         """(P, n_slots) or (P, n_local_max) device views -> (n_global,) colors."""
@@ -265,4 +329,66 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
         indptr=indptr, indices=indices, nbr=nbr, edge_src=edge_src,
         boundary=boundary, ghost_owner=ghost_owner, ghost_slot=ghost_slot,
         gvid=gvid, prio=prio, is_internal=is_internal, degree=degree,
+    )
+
+
+def build_comm_plan(pg: PartitionedGraph) -> CommPlan:
+    """Derive the sparse neighbour-to-neighbour schedule from the ghosts.
+
+    Shard q's ghosts are sorted by global vertex id, and block partitioning
+    makes ``owner`` monotone in the id — so the ghosts owned by one shard p
+    form one contiguous, ascending run.  That run *is* p's send list to q
+    (the boundary colors q actually reads), and the position of each ghost
+    inside its run is the receive-side gather index.  Both sides are derived
+    from the same pass, so they agree by construction.
+    """
+    P = pg.P
+    n_send = np.zeros((P, P), dtype=np.int32)
+    send_lists: dict[tuple[int, int], np.ndarray] = {}
+    ghost_pos = np.zeros((P, pg.max_ghost), dtype=np.int32)
+    ghost_shift = np.full((P, pg.max_ghost), -1, dtype=np.int32)
+
+    for q in range(P):
+        ng = int(pg.n_ghost[q])
+        if ng == 0:
+            continue
+        owners = pg.ghost_owner[q, :ng]
+        vids = pg.gvid[q, pg.n_local_max : pg.n_local_max + ng]
+        # contiguous owner runs (owners monotone: vids sorted, blocks ordered)
+        starts = np.flatnonzero(np.r_[True, owners[1:] != owners[:-1]])
+        ends = np.r_[starts[1:], ng]
+        for s, e in zip(starts, ends):
+            p = int(owners[s])
+            send_lists[(p, q)] = (vids[s:e] - pg.offs[p]).astype(np.int32)
+            n_send[p, q] = e - s
+            ghost_pos[q, s:e] = np.arange(e - s, dtype=np.int32)
+            ghost_shift[q, s:e] = (q - p) % P
+
+    # retain only ring shifts with any traffic; each round pads to its own
+    # global (pmax) width
+    srcs, dsts = np.nonzero(n_send)
+    all_shifts = (dsts - srcs) % P
+    shifts = tuple(int(k) for k in np.unique(all_shifts))
+    widths = tuple(
+        int(n_send[np.arange(P), (np.arange(P) + k) % P].max())
+        for k in shifts)
+    max_send = max(widths, default=0)
+
+    send_slot = np.full((P, max(len(shifts), 1), max(max_send, 1)),
+                        pg.sentinel, dtype=np.int32)
+    for r, k in enumerate(shifts):
+        for p in range(P):
+            q = (p + k) % P
+            sl = send_lists.get((p, q))
+            if sl is not None:
+                send_slot[p, r, : len(sl)] = sl
+
+    shift_to_round = np.full((P,), -1, dtype=np.int32)
+    for r, k in enumerate(shifts):
+        shift_to_round[k] = r
+
+    return CommPlan(
+        shifts=shifts, widths=widths, max_send=max_send, n_send=n_send,
+        send_slot=send_slot, ghost_shift=ghost_shift, ghost_pos=ghost_pos,
+        shift_to_round=np.broadcast_to(shift_to_round, (P, P)).copy(),
     )

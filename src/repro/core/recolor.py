@@ -22,11 +22,15 @@ schedules ND-RAND%x / ND-RAND%2^i handled by `recolor_iterations`.
 
 Piggybacking (§3.1) becomes *exchange-step coalescing* on TPU: a ghost color
 assigned at step s is only needed by a local reader at step t>s, so the
-boundary all-gather after step s can be deferred to step t-1; everything
+boundary exchange after step s can be deferred to step t-1; everything
 pending rides that one collective ("piggybacks"). The pre-communication of
 the paper — "who receives at which step" — is the OR-reduce (pmax) of each
 shard's needed-step bitmap. `needed[K]` is the end-of-iteration exchange that
-carries all remaining deferred colors.
+carries all remaining deferred colors.  Under the sparse scheme
+(`RecolorConfig.scheme`, DESIGN.md §2) the bitmap is additionally refined
+*per link*: each dependency marks only the ppermute round of its writer's
+ring shift, so an exchange event ships just the rounds some destination
+still needs.
 
 Asynchronous recoloring (aRC, §3): each shard *locally* orders vertices by
 color class and reruns the speculative framework (conflicts possible).
@@ -41,10 +45,12 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
-from .comm import AXIS, AxisComm, exchange_boundary, run_sharded, run_sim
+from .comm import (AXIS, SCHEMES, SPARSE, AxisComm, CommConfig,
+                   exchange_boundary, make_exchange, run_sharded, run_sim,
+                   stats_to_host)
 from .graph import PartitionedGraph
-from .speculative import (ColorConfig, _compact_order, color_spmd,
-                          validate_color_bounds)
+from .speculative import (ColorConfig, _compact_order, _plan_static,
+                          color_spmd, validate_color_bounds)
 
 RV = "rv"
 NI = "ni"
@@ -59,6 +65,7 @@ class RecolorConfig:
 
     max_colors: int = 1024         # bound on colors of the SEED coloring
     piggyback: bool = True         # paper §3.1 (False = exchange every step)
+    scheme: str = SPARSE           # boundary exchange: "sparse" | "allgather"
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
     chunk: int = 256               # vertices selected per chunk (ELL tile rows)
     backend: str = "auto"          # kernels.ops backend: auto | xla | pallas
@@ -66,11 +73,16 @@ class RecolorConfig:
 
     def __post_init__(self):
         validate_color_bounds(self.max_colors, self.wire16, self.backend)
+        assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
         assert self.chunk > 0
 
     @property
     def n_words(self) -> int:
         return self.max_colors // 32
+
+    @property
+    def comm_config(self) -> CommConfig:
+        return CommConfig(scheme=self.scheme, wire16=self.wire16)
 
 
 def class_sizes(view, n_local, n_local_max, max_colors, comm: AxisComm):
@@ -110,14 +122,13 @@ def permutation_rank(sizes, kind: str, key) -> jnp.ndarray:
     return jnp.where(present, rank, 0).astype(jnp.int32)
 
 
-def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
-                      comm: AxisComm, piggyback: bool):
-    """The piggybacking schedule: needed[t] = all-gather after step t.
+def _cross_deps(step_of, arrs, n_local_max):
+    """Per cross edge: (dep mask, reader step s_v, ghost index of the writer).
 
-    For every cross edge whose reader (local, step s_v) depends on a writer
-    (ghost, step s_u < s_v), an exchange must happen in [s_u, s_v-1]; the
-    just-in-time choice is s_v - 1, letting every pending color piggyback.
-    Entry K is the end-of-iteration exchange (always on).
+    A dependency exists where the local reader (step ``s_v``) reads a ghost
+    whose writer recolors at an earlier step ``s_u``; an exchange of that
+    pair must then happen in ``[s_u, s_v-1]`` — the just-in-time choice is
+    ``s_v - 1``, letting every pending color piggyback.
     """
     src, dst = arrs["edge_src"], arrs["indices"]
     step_rows = jnp.concatenate(
@@ -126,6 +137,16 @@ def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
     s_u = step_of[dst]
     is_ghost = (dst >= n_local_max) & (dst < step_of.shape[0] - 1)
     dep = is_ghost & (s_u > 0) & (s_v > s_u)
+    return dep, s_v, jnp.maximum(dst - n_local_max, 0)
+
+
+def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
+                      comm: AxisComm, piggyback: bool):
+    """The piggybacking schedule: needed[t] = exchange event after step t.
+
+    Entry K is the end-of-iteration exchange (always on).
+    """
+    dep, s_v, _ = _cross_deps(step_of, arrs, n_local_max)
     if piggyback:
         idx = jnp.where(dep, s_v - 1, 0)
         needed = jnp.zeros((max_colors + 1,), bool).at[idx].max(dep)
@@ -137,11 +158,41 @@ def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
     return needed
 
 
-def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
+def _needed_exchange_rounds(step_of, arrs, n_local_max, K, max_colors,
+                            comm: AxisComm, piggyback: bool, P_size: int,
+                            n_rounds: int):
+    """Sparse piggybacking: needed[t, r] = ``ppermute`` round r after step t.
+
+    The paper's pre-communication ("who receives at which step") refined per
+    *link*: each dependency marks only the ring shift of its writer's owner,
+    so an exchange event ships only the rounds some destination still needs.
+    Row ``max_colors`` (end of iteration) runs every round — it leaves all
+    ghosts fresh for the next iteration.
+    """
+    dep, s_v, gi = _cross_deps(step_of, arrs, n_local_max)
+    shift = (comm.index() - arrs["ghost_owner"][gi]) % P_size
+    rnd = arrs["shift_to_round"][shift]              # >= 0 wherever dep holds
+    if piggyback:
+        idx = jnp.where(dep, s_v - 1, 0)
+        rdx = jnp.where(dep, rnd, 0)
+        needed = jnp.zeros((max_colors + 1, max(n_rounds, 1)),
+                           bool).at[idx, rdx].max(dep)[:, :n_rounds]
+        needed = needed.at[0].set(False)
+        needed = comm.pmax(needed)                   # pre-communication
+    else:
+        needed = jnp.broadcast_to(
+            (jnp.arange(max_colors + 1) <= K)[:, None],
+            (max_colors + 1, n_rounds))
+    needed = needed.at[max_colors].set(True)
+    return needed
+
+
+def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
+                 P_size: int | None = None, plan_static=None):
     """One synchronous recoloring iteration (per-shard SPMD).
 
     `view` is a valid coloring (n_slots,) with fresh ghosts. Returns the new
-    view plus stats (colors, executed/possible exchanges).
+    view plus stats (colors, executed/possible exchanges, wire bytes).
 
     Hot loop: vertices are sorted by class step; each class is consumed as
     <= ceil(pmax(class size)/chunk) fixed-size chunks.  A chunk gathers its
@@ -150,6 +201,12 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
     occupancy, no scatter over the edge list.  Chunk order within a class is
     irrelevant (a class is an independent set), and the chunk schedule is
     identical on every shard, so collectives stay uniform.
+
+    Exchanges route through ``comm.make_exchange``; under the sparse scheme
+    the piggyback schedule additionally masks *which ppermute rounds* each
+    exchange event ships (``_needed_exchange_rounds``) — a link with nothing
+    pending costs nothing.  ``P_size``/``plan_static`` are required for the
+    sparse scheme (the drivers thread them automatically).
     """
     comm = AxisComm()
     n_local_max = arrs["indptr"].shape[0] - 1
@@ -158,6 +215,10 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
     nbr = arrs["nbr"]
     mc = cfg.max_colors
     chunk = cfg.chunk
+    sparse = cfg.scheme == SPARSE
+    if sparse and (P_size is None or plan_static is None):
+        raise ValueError("sparse scheme needs P_size and plan_static "
+                         "(see PartitionedGraph.comm_plan)")
 
     sizes = class_sizes(view, n_local, n_local_max, mc, comm)
     n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
@@ -165,14 +226,20 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
     step_of = rank[view]                              # (n_slots,) step per slot
     step_of = step_of.at[n_slots - 1].set(0)          # sentinel
 
-    needed = _needed_exchanges(step_of, arrs, n_local_max, n_classes, mc,
-                               comm, cfg.piggyback)
+    if sparse:
+        n_rounds = len(plan_static[0])
+        needed_rounds = _needed_exchange_rounds(
+            step_of, arrs, n_local_max, n_classes, mc, comm, cfg.piggyback,
+            P_size, n_rounds)
+        # event bitmap = any round pending (one dep scan + pmax, not two);
+        # entry mc stays on so event counting matches the broadcast scheme
+        needed = needed_rounds.any(axis=1).at[mc].set(True)
+    else:
+        needed = _needed_exchanges(step_of, arrs, n_local_max, n_classes, mc,
+                                   comm, cfg.piggyback)
 
-    exchange = partial(exchange_boundary, boundary=arrs["boundary"],
-                       ghost_owner=arrs["ghost_owner"],
-                       ghost_slot=arrs["ghost_slot"],
-                       n_local_max=n_local_max, comm=comm,
-                       wire_dtype=jnp.int16 if cfg.wire16 else None)
+    exchange = make_exchange(arrs, n_local_max, P_size, comm,
+                             cfg.comm_config, plan_static)
 
     valid_local = jnp.arange(n_local_max) < n_local
     step_loc = step_of[:n_local_max]
@@ -194,7 +261,7 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
     cum = jnp.cumsum(chunks_per_class)     # cum[t] = chunks through class t
 
     def chunk_body(ci, carry):
-        new_view, n_ex = carry
+        new_view, n_ex, n_bytes = carry
         t = jnp.searchsorted(cum, ci, side="right").astype(jnp.int32)
         j = ci - (cum[t] - chunks_per_class[t])          # chunk # within class
         pos = start_local[t] + j * chunk
@@ -209,13 +276,20 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
         val = jnp.where(active, colors, 0)               # sentinel (stays 0)
         new_view = new_view.at[idx].set(val.astype(new_view.dtype))
         is_last = (ci + 1) == cum[t]
-        do_ex = is_last & (needed[jnp.minimum(t, mc)] | (t == n_classes))
-        new_view = jax.lax.cond(do_ex, exchange, lambda v: v, new_view)
-        return new_view, n_ex + do_ex.astype(jnp.int32)
+        is_end = t == n_classes
+        do_ex = is_last & (needed[jnp.minimum(t, mc)] | is_end)
+        if sparse:
+            mask = needed_rounds[jnp.minimum(t, mc)] | is_end
+            ex = lambda v: exchange(v, round_mask=mask)
+        else:
+            ex = exchange
+        new_view, b = jax.lax.cond(do_ex, ex,
+                                   lambda v: (v, jnp.int32(0)), new_view)
+        return new_view, n_ex + do_ex.astype(jnp.int32), n_bytes + b
 
     new_view0 = jnp.zeros((n_slots,), jnp.int32)
-    new_view, n_ex = jax.lax.fori_loop(
-        0, cum[mc], chunk_body, (new_view0, jnp.int32(0)))
+    new_view, n_ex, n_bytes = jax.lax.fori_loop(
+        0, cum[mc], chunk_body, (new_view0, jnp.int32(0), jnp.int32(0)))
 
     local_max = jnp.max(jnp.where(valid_local, new_view[:n_local_max], 0))
     stats = dict(
@@ -223,6 +297,7 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig):
         n_colors_before=n_classes,
         n_exchanges=n_ex,
         n_steps=n_classes,
+        wire_bytes=n_bytes,
     )
     return new_view, stats
 
@@ -239,7 +314,8 @@ def arc_order_spmd(view, n_local, n_local_max, rank):
 
 
 def arc_spmd(arrs, view, key, perm_kind: str, rc_cfg: RecolorConfig,
-             sp_cfg: ColorConfig):
+             sp_cfg: ColorConfig, P_size: int | None = None,
+             plan_static=None):
     """One asynchronous recoloring iteration: local class order + speculative."""
     comm = AxisComm()
     n_local_max = arrs["indptr"].shape[0] - 1
@@ -247,52 +323,61 @@ def arc_spmd(arrs, view, key, perm_kind: str, rc_cfg: RecolorConfig,
     sizes = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
     rank = permutation_rank(sizes, perm_kind, key)
     order = arc_order_spmd(view, arrs["n_local"], n_local_max, rank)
-    return color_spmd(arrs, order, key, sp_cfg)
+    return color_spmd(arrs, order, key, sp_cfg, P_size=P_size,
+                      plan_static=plan_static)
 
 
 # ----------------------------------------------------------------- drivers --
 
 @lru_cache(maxsize=64)
-def _rc_sim_fn(P, perm_kind, cfg):
-    fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg)
+def _rc_sim_fn(P, perm_kind, cfg, plan_static):
+    fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg, P_size=P,
+                 plan_static=plan_static)
     return jax.jit(lambda arrs, view, key: run_sim(fn, P, (arrs, view), (key,)))
 
 
 def recolor_sim(pg: PartitionedGraph, view, perm_kind: str,
                 cfg: RecolorConfig, key=None):
-    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    arrs = {k: jnp.asarray(v) for k, v in
+            pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
         key = jax.random.key(cfg.seed)
-    new_view, stats = _rc_sim_fn(pg.P, perm_kind, cfg)(arrs, jnp.asarray(view), key)
-    return new_view, {k: int(v[0]) for k, v in stats.items()}
+    new_view, stats = _rc_sim_fn(pg.P, perm_kind, cfg, _plan_static(pg, cfg))(
+        arrs, jnp.asarray(view), key)
+    return new_view, stats_to_host(stats)
 
 
 @lru_cache(maxsize=64)
-def _arc_sim_fn(P, perm_kind, rc_cfg, sp_cfg):
-    fn = partial(arc_spmd, perm_kind=perm_kind, rc_cfg=rc_cfg, sp_cfg=sp_cfg)
+def _arc_sim_fn(P, perm_kind, rc_cfg, sp_cfg, plan_static):
+    fn = partial(arc_spmd, perm_kind=perm_kind, rc_cfg=rc_cfg, sp_cfg=sp_cfg,
+                 P_size=P, plan_static=plan_static)
     return jax.jit(lambda arrs, view, key: run_sim(fn, P, (arrs, view), (key,)))
 
 
 def arc_sim(pg: PartitionedGraph, view, perm_kind: str, rc_cfg: RecolorConfig,
             sp_cfg: ColorConfig, key=None):
-    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    arrs = {k: jnp.asarray(v) for k, v in
+            pg.arrays(sparse=sp_cfg.scheme == SPARSE).items()}
     if key is None:
         key = jax.random.key(rc_cfg.seed)
-    new_view, stats = _arc_sim_fn(pg.P, perm_kind, rc_cfg, sp_cfg)(
+    new_view, stats = _arc_sim_fn(pg.P, perm_kind, rc_cfg, sp_cfg,
+                                  _plan_static(pg, sp_cfg))(
         arrs, jnp.asarray(view), key)
-    return new_view, {k: int(v[0]) for k, v in stats.items()}
+    return new_view, stats_to_host(stats)
 
 
 def recolor_sharded(pg: PartitionedGraph, view, perm_kind: str,
                     cfg: RecolorConfig, mesh, key=None):
-    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    arrs = {k: jnp.asarray(v) for k, v in
+            pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
         key = jax.random.key(cfg.seed)
-    fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg)
+    fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg, P_size=pg.P,
+                 plan_static=_plan_static(pg, cfg))
     new_view, stats = jax.jit(
         lambda a, v, k: run_sharded(fn, mesh, (a, v), (k,)))(
             arrs, jnp.asarray(view), key)
-    return new_view, {k: int(jnp.max(v)) for k, v in stats.items()}
+    return new_view, stats_to_host(stats)
 
 
 def schedule_for_iteration(it: int, base: str = ND, rand_every: int = 0,

@@ -9,8 +9,9 @@ Round structure (all inside one jitted SPMD function):
         exchange boundary colors (every `exchange_every` supersteps; =1 is the
         paper's synchronous variant, >1 models asynchronous staleness)
     final boundary exchange
-    detect conflicts on all local edges; the lower-priority endpoint is
-    uncolored and queued for the next round (random total order tie-break)
+    detect conflicts over the round's *frontier* (the vertices colored this
+    round — see below); the lower-priority endpoint is uncolored and queued
+    for the next round (random total order tie-break)
 
 Chunk coloring has two modes (``ColorConfig.parallel_chunk``):
 
@@ -27,6 +28,26 @@ Chunk coloring has two modes (``ColorConfig.parallel_chunk``):
     involve boundary vertices).  Also used for Least-Used selection, whose
     running usage histogram is inherently sequential.
 
+Communication scaling (this file + comm.py/graph.py, DESIGN.md §2):
+
+- exchanges route through ``comm.make_exchange`` — the broadcast all-gather
+  or the sparse per-neighbour ``ppermute`` schedule (``ColorConfig.scheme``),
+  bitwise-identical colorings either way, measured wire bytes in the stats;
+- *no-op exchange elision*: an exchange whose payloads cannot have changed
+  (no shard colored a boundary vertex since the last exchange, pmax-agreed)
+  is skipped.  With an interior-first visit order
+  (``ordering.INTERNAL_FIRST``) the supersteps covering the interior prefix
+  therefore perform no communication at all.  Skipping a no-op exchange is
+  bitwise-safe: ghost values could not have changed;
+- conflict detection and repair shrink to the *conflict frontier*: rounds
+  after the first only rescan the vertices recolored this round (chunked,
+  trip count pmax-reduced) instead of all of ``n_local_max``.  Conflicts can
+  only involve this round's frontier — older colors were mutually repaired
+  at the previous round's detection, and a fresh vertex always sees every
+  older neighbour color (local ones directly, remote ones from the round's
+  exchanges) — and in the paper's sequential mode the frontier after round 0
+  is further contained in the boundary set.
+
 The same function serves initial coloring (any order, any selection strategy
 incl. Random-X Fit) and the aRC second pass (order derived from a previous
 coloring's classes).
@@ -42,7 +63,8 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 from . import selection as sel
-from .comm import AXIS, AxisComm, exchange_boundary, run_sharded, run_sim
+from .comm import (AXIS, SCHEMES, SPARSE, AxisComm, CommConfig,
+                   make_exchange, run_sharded, run_sim, stats_to_host)
 from .graph import PartitionedGraph
 
 
@@ -69,6 +91,7 @@ class ColorConfig:
     stagger_estimate: int = 64     # initial color estimate for Staggered FF
     exchange_every: int = 1        # 1 = synchronous; k>1 = bounded staleness
     max_rounds: int = 64
+    scheme: str = SPARSE           # boundary exchange: "sparse" | "allgather"
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
     parallel_chunk: bool = True    # tile-parallel supersteps (False = paper's
                                    # sequential scalar loop, bitwise-preserved)
@@ -80,11 +103,16 @@ class ColorConfig:
 
     def __post_init__(self):
         validate_color_bounds(self.max_colors, self.wire16, self.backend)
+        assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
         assert self.tile > 0
 
     @property
     def n_words(self) -> int:
         return self.max_colors // 32
+
+    @property
+    def comm_config(self) -> CommConfig:
+        return CommConfig(scheme=self.scheme, wire16=self.wire16)
 
     @property
     def use_parallel_chunk(self) -> bool:
@@ -180,120 +208,178 @@ def _parallel_chunk(view, usage, order_pad, rand_u32, start, arrs, p_idx,
     return jax.lax.fori_loop(0, n_tiles, tile_body, (view, usage))
 
 
-def _detect_conflicts(view, arrs, n_local_max, backend="auto"):
-    """Uncolor the lower-priority endpoint of every same-color edge.
+def _detect_conflicts_frontier(view, arrs, order_pad, n_steps, n_need,
+                               superstep: int, backend="auto"):
+    """Uncolor the lower-priority endpoint of every same-color frontier edge.
 
-    Gather-only on the ELL layout (one row per local vertex) routed through
-    the shared conflict kernel — no scatter over the edge list.
+    Chunked over the round's visit order: only the ``n_need`` vertices
+    recolored this round are rescanned (``n_steps`` is pmax-reduced by the
+    caller, so the trip count is shard-uniform and *shrinks* with the
+    conflict frontier).  Every chunk reads the same pre-detection ``view`` —
+    identical results to one full-width pass — and writes uncolorings into a
+    separate copy.  Returns (new_view, n_conflicts, any_boundary_conflict).
     """
-    nbr, prio = arrs["nbr"], arrs["prio"]
-    my_color = view[:n_local_max]
-    my_prio = prio[:n_local_max]
-    conf = ops.detect_conflicts(my_color, my_prio, view[nbr], prio[nbr],
-                                jnp.ones((n_local_max,), bool),
-                                backend=backend)
-    new_local = jnp.where(conf, 0, my_color)
-    view = jax.lax.dynamic_update_slice(view, new_local.astype(view.dtype), (0,))
-    return view, jnp.sum(conf, dtype=jnp.int32)
+    nbr, prio, is_internal = arrs["nbr"], arrs["prio"], arrs["is_internal"]
+    n_slots = view.shape[0]
+
+    def body(si, carry):
+        new_view, n_conf, bnd = carry
+        rows = jax.lax.dynamic_slice(order_pad, (si * superstep,),
+                                     (superstep,))
+        pos = si * superstep + jnp.arange(superstep, dtype=jnp.int32)
+        active = (rows >= 0) & (pos < n_need)
+        r_safe = jnp.maximum(rows, 0)
+        conf = ops.detect_conflicts(view[r_safe], prio[r_safe],
+                                    view[nbr[r_safe]], prio[nbr[r_safe]],
+                                    active, backend=backend)
+        idx = jnp.where(conf, r_safe, n_slots - 1)   # sentinel stays 0
+        new_view = new_view.at[idx].set(0)
+        n_conf = n_conf + jnp.sum(conf, dtype=jnp.int32)
+        bnd = bnd | jnp.any(conf & ~is_internal[r_safe])
+        return new_view, n_conf, bnd
+
+    return jax.lax.fori_loop(
+        0, n_steps, body, (view, jnp.int32(0), jnp.bool_(False)))
 
 
 def _compact_order(order, view):
-    """Stable-move still-uncolored vertices to the front of the visit order."""
+    """Stable-move still-uncolored vertices to the front of the visit order.
+
+    Uncolored vertices are always contained in the previous round's frontier
+    (detection only uncolors freshly-colored rows), so the compacted prefix
+    — and with it every per-round trip count — shrinks monotonically.
+    """
     v_safe = jnp.maximum(order, 0)
     needs = (order >= 0) & (view[v_safe] == 0)
     perm = jnp.argsort(~needs, stable=True)
     return order[perm], jnp.sum(needs, dtype=jnp.int32)
 
 
-def color_spmd(arrs, order, key, cfg: ColorConfig):
-    """Per-shard SPMD speculative coloring. Returns (view, stats dict)."""
+def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
+               plan_static=None):
+    """Per-shard SPMD speculative coloring. Returns (view, stats dict).
+
+    ``P_size``/``plan_static`` (``PartitionedGraph.comm_plan.static``) are
+    required for the sparse exchange scheme — the ``ppermute`` round
+    schedule is static; the drivers thread them automatically.
+    """
     comm = AxisComm()
     n_local_max = arrs["indptr"].shape[0] - 1
     n_slots = arrs["prio"].shape[0]
     p_idx = comm.index()
+    if cfg.scheme == SPARSE and (P_size is None or plan_static is None):
+        raise ValueError("sparse scheme needs P_size and plan_static "
+                         "(see PartitionedGraph.comm_plan)")
 
-    exchange = partial(exchange_boundary, boundary=arrs["boundary"],
-                       ghost_owner=arrs["ghost_owner"],
-                       ghost_slot=arrs["ghost_slot"],
-                       n_local_max=n_local_max, comm=comm,
-                       wire_dtype=jnp.int16 if cfg.wire16 else None)
+    exchange = make_exchange(arrs, n_local_max, P_size, comm,
+                             cfg.comm_config, plan_static)
+    no_ex = lambda v: (v, jnp.int32(0))
 
+    S = cfg.superstep
+    n_chunks_max = -(-n_local_max // S)
     view0 = jnp.zeros((n_slots,), jnp.int32)
     usage0 = jnp.zeros((cfg.max_colors,), jnp.int32)
 
     def round_body(state):
-        view, usage, rnd, _, n_ex = state
+        view, usage, rnd, _, n_ex, n_bytes = state
         order_r, n_need = _compact_order(order, view)
         n_need_max = comm.pmax(n_need)
-        n_steps = (n_need_max + cfg.superstep - 1) // cfg.superstep
+        n_steps = (n_need_max + S - 1) // S
         rkey = jax.random.fold_in(jax.random.fold_in(key, rnd), p_idx)
         rand_u32 = jax.random.bits(rkey, (n_slots,), jnp.uint32)
         order_pad = jnp.concatenate(
-            [order_r, jnp.full((cfg.superstep,), -1, order_r.dtype)])
+            [order_r, jnp.full((S,), -1, order_r.dtype)])
+
+        # Which superstep chunks color at least one boundary vertex, on any
+        # shard (one pmax per round).  Chunks of interior vertices cannot
+        # change any exchange payload, so the exchanges they would trigger
+        # are elided below — bitwise-safe, the ghosts could not move.
+        pos = jnp.arange(n_chunks_max * S, dtype=jnp.int32)
+        opad = order_pad[: n_chunks_max * S]
+        bnd = ((opad >= 0) & (pos < n_need)
+               & ~arrs["is_internal"][jnp.maximum(opad, 0)])
+        chunk_bnd = comm.pmax(jnp.any(bnd.reshape(n_chunks_max, S), axis=1))
 
         def superstep(si, carry):
-            view, usage, n_ex = carry
+            view, usage, n_ex, n_bytes, pending = carry
             if cfg.use_parallel_chunk:
                 view, usage = _parallel_chunk(view, usage, order_pad,
-                                              rand_u32, si * cfg.superstep,
+                                              rand_u32, si * S,
                                               arrs, p_idx, cfg)
             else:
                 view, usage = _greedy_chunk(view, usage, order_r, rand_u32,
-                                            si * cfg.superstep, cfg.superstep,
-                                            arrs, p_idx, cfg)
-            do_ex = ((si + 1) % cfg.exchange_every == 0) | (si == n_steps - 1)
-            view = jax.lax.cond(do_ex, exchange, lambda v: v, view)
-            return view, usage, n_ex + do_ex.astype(jnp.int32)
+                                            si * S, S, arrs, p_idx, cfg)
+            pending = pending | chunk_bnd[si]
+            due = ((si + 1) % cfg.exchange_every == 0) | (si == n_steps - 1)
+            do_ex = due & pending
+            view, b = jax.lax.cond(do_ex, exchange, no_ex, view)
+            return (view, usage, n_ex + do_ex.astype(jnp.int32),
+                    n_bytes + b, pending & ~do_ex)
 
-        view, usage, n_ex = jax.lax.fori_loop(
-            0, n_steps, superstep, (view, usage, n_ex))
-        view, n_conf = _detect_conflicts(view, arrs, n_local_max,
-                                         backend=cfg.backend)
-        view = exchange(view)
+        view, usage, n_ex, n_bytes, _ = jax.lax.fori_loop(
+            0, n_steps, superstep,
+            (view, usage, n_ex, n_bytes, jnp.bool_(False)))
+        view, n_conf, bnd_conf = _detect_conflicts_frontier(
+            view, arrs, order_pad, n_steps, n_need, S, backend=cfg.backend)
+        # publish uncolorings only if a boundary vertex lost somewhere
+        do_final = comm.pmax(bnd_conf)
+        view, b = jax.lax.cond(do_final, exchange, no_ex, view)
         n_conf = comm.psum(n_conf)
-        return view, usage, rnd + 1, n_conf, n_ex + 1
+        return (view, usage, rnd + 1, n_conf,
+                n_ex + do_final.astype(jnp.int32), n_bytes + b)
 
     def cond(state):
-        _, _, rnd, n_conf, _ = state
+        _, _, rnd, n_conf, _, _ = state
         return (n_conf > 0) & (rnd < cfg.max_rounds)
 
-    state0 = (view0, usage0, jnp.int32(0), jnp.int32(1), jnp.int32(0))
+    state0 = (view0, usage0, jnp.int32(0), jnp.int32(1), jnp.int32(0),
+              jnp.int32(0))
     # round 0 must run: seed n_conf=1
-    view, usage, n_rounds, _, n_ex = jax.lax.while_loop(cond, round_body, state0)
+    view, usage, n_rounds, _, n_ex, n_bytes = jax.lax.while_loop(
+        cond, round_body, state0)
 
     local_max = jnp.max(view[:n_local_max])
     stats = dict(
         n_colors=comm.pmax(local_max),
         n_rounds=n_rounds,
         n_exchanges=n_ex,
+        wire_bytes=n_bytes,
     )
     return view, stats
 
 
 @lru_cache(maxsize=64)
-def _sim_fn(P, cfg):
-    fn = partial(color_spmd, cfg=cfg)
+def _sim_fn(P, cfg, plan_static):
+    fn = partial(color_spmd, cfg=cfg, P_size=P, plan_static=plan_static)
     return jax.jit(lambda arrs, order, key: run_sim(fn, P, (arrs, order), (key,)))
+
+
+def _plan_static(pg: PartitionedGraph, cfg) -> tuple | None:
+    return pg.comm_plan.static if cfg.scheme == SPARSE else None
 
 
 def color_graph_sim(pg: PartitionedGraph, order, cfg: ColorConfig,
                     key=None):
     """Run distributed coloring *simulated* on one device (P vmap lanes)."""
-    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    arrs = {k: jnp.asarray(v) for k, v in
+            pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
         key = jax.random.key(cfg.seed)
-    view, stats = _sim_fn(pg.P, cfg)(arrs, jnp.asarray(order), key)
-    return view, {k: int(v[0]) if v.ndim else int(v) for k, v in stats.items()}
+    view, stats = _sim_fn(pg.P, cfg, _plan_static(pg, cfg))(
+        arrs, jnp.asarray(order), key)
+    return view, stats_to_host(stats)
 
 
 def color_graph_sharded(pg: PartitionedGraph, order, cfg: ColorConfig, mesh,
                         key=None):
     """Run distributed coloring on a real mesh axis ``workers``."""
-    arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
+    arrs = {k: jnp.asarray(v) for k, v in
+            pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
         key = jax.random.key(cfg.seed)
-    fn = partial(color_spmd, cfg=cfg)
+    fn = partial(color_spmd, cfg=cfg, P_size=pg.P,
+                 plan_static=_plan_static(pg, cfg))
     view, stats = jax.jit(
         lambda a, o, k: run_sharded(fn, mesh, (a, o), (k,)))(
             arrs, jnp.asarray(order), key)
-    return view, {k: int(jnp.max(v)) for k, v in stats.items()}
+    return view, stats_to_host(stats)

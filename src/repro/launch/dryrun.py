@@ -29,6 +29,7 @@ from pathlib import Path
 
 import jax
 
+from repro import compat
 from repro.configs import SHAPES, get_arch, list_archs, shape_applicable
 from repro.launch.mesh import make_production_mesh, make_worker_mesh
 from repro.launch.steps import input_specs
@@ -59,7 +60,7 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     n_chips = mesh.devices.size
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fn, args = input_specs(arch, shape, mesh)
             lowered = jax.jit(fn).lower(*args)
             t_lower = time.time() - t0
@@ -134,6 +135,7 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
     mesh = make_worker_mesh(P)
     g = rmat.rmat_er(18, 8, seed=1)          # 262k vertices over 256/512 shards
     pg = partition_graph(g, P)
+    plan = pg.comm_plan
     rec: dict = dict(arch="coloring", shape=f"rmat18_P{P}",
                      mesh=mesh_tag(multi_pod), status="skipped")
     t0 = time.time()
@@ -141,8 +143,8 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
         arrs = {k: jnp.asarray(v) for k, v in pg.arrays().items()}
         order = jnp.zeros((P, pg.n_local_max), jnp.int32)
         key = jax.random.key(0)
-        cfg = ColorConfig(max_colors=256, superstep=64)
-        fn = partial(color_spmd, cfg=cfg)
+        cfg = ColorConfig(max_colors=256, superstep=64, scheme="allgather")
+        fn = partial(color_spmd, cfg=cfg, P_size=P)
         lowered = jax.jit(
             lambda a, o, k: run_sharded(fn, mesh, (a, o), (k,))).lower(
                 arrs, order, key)
@@ -151,7 +153,8 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
         analysis = analyze_hlo(hlo)
         # one recoloring iteration too
         rfn = partial(recolor_spmd, perm_kind="nd",
-                      cfg=RecolorConfig(max_colors=256))
+                      cfg=RecolorConfig(max_colors=256, scheme="allgather"),
+                      P_size=P)
         view = jnp.zeros((P, pg.n_slots), jnp.int32)
         lowered_rc = jax.jit(
             lambda a, v, k: run_sharded(rfn, mesh, (a, v), (k,))).lower(
@@ -160,11 +163,34 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
         analysis_rc = analyze_hlo(compiled_rc.as_text())
         # beyond-paper: int16 wire payloads (DESIGN.md §5)
         rfn16 = partial(recolor_spmd, perm_kind="nd",
-                        cfg=RecolorConfig(max_colors=256, wire16=True))
+                        cfg=RecolorConfig(max_colors=256, wire16=True,
+                                          scheme="allgather"), P_size=P)
         compiled_rc16 = jax.jit(
             lambda a, v, k: run_sharded(rfn16, mesh, (a, v), (k,))).lower(
                 arrs, view, key).compile()
         analysis_rc16 = analyze_hlo(compiled_rc16.as_text())
+        # sparse neighbour-to-neighbour scheme (DESIGN.md §2): modeled bytes
+        # always; lowered too unless the round schedule is huge (one
+        # collective per ppermute round in the HLO body)
+        from repro.core.comm import allgather_bytes_per_exchange
+        sparse_rec = dict(
+            n_rounds=len(plan.shifts),
+            modeled_bytes_per_exchange=plan.bytes_per_exchange(),
+            allgather_modeled_bytes_per_exchange=allgather_bytes_per_exchange(
+                P, pg.max_boundary),
+        )
+        if len(plan.shifts) <= 64:
+            rfs = partial(recolor_spmd, perm_kind="nd",
+                          cfg=RecolorConfig(max_colors=256, scheme="sparse"),
+                          P_size=P, plan_static=plan.static)
+            compiled_sp = jax.jit(
+                lambda a, v, k: run_sharded(rfs, mesh, (a, v), (k,))).lower(
+                    arrs, view, key).compile()
+            sparse_rec["recolor_coll_bytes"] = analyze_hlo(
+                compiled_sp.as_text())["coll_bytes"]
+        else:
+            sparse_rec["lowering"] = (
+                f"skipped: {len(plan.shifts)} ppermute rounds")
         rec.update(
             status="ok", n_chips=P, compile_s=round(time.time() - t0, 2),
             color_coll_count=analysis["coll_count"],
@@ -172,10 +198,12 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
             recolor_coll_count=analysis_rc["coll_count"],
             recolor_coll_bytes=analysis_rc["coll_bytes"],
             recolor_wire16_coll_bytes=analysis_rc16["coll_bytes"],
+            sparse=sparse_rec,
             graph=dict(n=g.n, m=g.m, P=P,
                        n_local_max=pg.n_local_max,
                        max_boundary=pg.max_boundary,
-                       max_ghost=pg.max_ghost),
+                       max_ghost=pg.max_ghost,
+                       max_send=plan.max_send),
         )
     except Exception as e:
         rec.update(status="error", error=f"{type(e).__name__}: {e}",

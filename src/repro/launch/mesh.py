@@ -6,28 +6,28 @@ axis is the cross-pod (DCN/ICI-bridge) dimension; DP and FSDP extend over it.
 
 Functions, not module constants: importing this module never touches JAX
 device state (the dry-run must set XLA_FLAGS before first device init).
+Mesh construction goes through ``repro.compat`` so the same code runs on
+old jax (no ``AxisType``) and new.
 """
 from __future__ import annotations
 
 import jax
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_worker_mesh(n_workers: int | None = None):
     """Flat 1-axis mesh for the coloring core (uses every device)."""
     n = n_workers or len(jax.devices())
-    return jax.make_mesh((n,), ("workers",), axis_types=_auto(1))
+    return compat.make_mesh((n,), ("workers",))
 
 
 def make_local_mesh():
     """Degenerate mesh for CPU smoke tests (1 device, both axes size 1)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return compat.make_mesh((1, 1), ("data", "model"))

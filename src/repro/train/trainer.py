@@ -15,6 +15,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ArchConfig, ShardingPlan
 from repro.data.pipeline import DataConfig, DataLoader
 from repro.models import param_defs
@@ -77,7 +78,7 @@ class Trainer:
 
     # -- state ------------------------------------------------------------
     def init_state(self):
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             params = init_params_sharded(self.pdefs, self.mesh,
                                          self.param_specs, self.tcfg.seed)
             opt_state = init_opt_state(params, self.opt_cfg)
@@ -111,7 +112,7 @@ class Trainer:
                 if self.injector:
                     self.injector.maybe_fail(step)
                 batch = next(loader)
-                with jax.set_mesh(self.mesh):
+                with compat.set_mesh(self.mesh):
                     params, opt_state, metrics = self._step_fn(
                         params, opt_state, batch)
                 step += 1
