@@ -1,0 +1,134 @@
+"""Distance-2 coloring over the two-hop halo: comm scaling + quality.
+
+Sweeps simulated P = 2..16 on a grid and two RMAT classes and records, per
+exchange scheme (sparse neighbour-to-neighbour vs all-gather):
+
+  - modeled bytes per full exchange at halo depth 2 (the two-hop ghost
+    tables are larger, so the broadcast's O(P·max_b2) table grows faster
+    than the sparse schedule's realized cross-structure bytes),
+  - *measured* wire bytes from the D2 drivers (`stats["wire_bytes"]`) for
+    speculative D2 coloring and one ND D2 recoloring iteration,
+  - wall time (sim backend) and a coloring hash — the schemes must agree
+    bitwise at depth 2 exactly as they do at depth 1.
+
+Writes BENCH_d2.json.  ``tile=16`` bounds intra-tile speculative conflicts
+(a hub neighbourhood is a D2 clique; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import (ColorConfig, RecolorConfig, check_coloring,
+                        color_graph_sim, colors_from_views, compute_order,
+                        ordering, partition_graph, recolor_sim, rmat)
+from repro.core.comm import allgather_bytes_per_exchange
+
+from .common import emit
+
+MC = 1024
+REPEAT = 2
+P_SWEEP = (2, 4, 8, 16)
+
+
+def _graphs(fast: bool):
+    if fast:
+        return {
+            "grid2d": rmat.grid2d(32, 32, 9),
+            "rmat_good": rmat.rmat_good(9, 8, seed=1),
+            "rmat_bad": rmat.rmat_bad(9, 8, seed=1),
+        }
+    return {
+        "grid2d": rmat.grid2d(64, 64, 9),
+        "grid3d": rmat.grid3d(16, 16, 16),
+        "rmat_er": rmat.rmat_er(11, 8, seed=1),
+        "rmat_good": rmat.rmat_good(11, 8, seed=1),
+        "rmat_bad": rmat.rmat_bad(11, 8, seed=1),
+    }
+
+
+def _hash(colors: np.ndarray) -> str:
+    return hashlib.sha256(colors.astype(np.int32).tobytes()).hexdigest()[:16]
+
+
+def _timeit(fn):
+    jax.block_until_ready(fn()[0])            # warmup / compile
+    t0 = time.time()
+    for _ in range(REPEAT):
+        out = fn()
+        jax.block_until_ready(out[0])
+    return out, (time.time() - t0) / REPEAT
+
+
+def run(fast: bool = True, out_path: str | Path = "BENCH_d2.json"):
+    graphs = _graphs(fast)
+    rec: dict = dict(max_colors=MC, repeat=REPEAT, distance=2, sweep=[])
+
+    for gname, g in graphs.items():
+        for P in P_SWEEP:
+            pg = partition_graph(g, P, halo=2)
+            plan = pg.comm_plan
+            order = compute_order(pg, ordering.INTERNAL_FIRST)
+            row: dict = dict(
+                graph=gname, n=g.n, m=g.m, P=P,
+                n_rounds=len(plan.shifts),
+                max_boundary=int(pg.max_boundary),
+                max_ghost=int(pg.max_ghost),
+                maxd2=int(pg.maxd2),
+                modeled_sparse_bytes_per_ex=plan.bytes_per_exchange(),
+                modeled_allgather_bytes_per_ex=allgather_bytes_per_exchange(
+                    P, int(pg.max_boundary)),
+            )
+            hashes = {}
+            for scheme in ("allgather", "sparse"):
+                cfg = ColorConfig(max_colors=MC, superstep=256, tile=16,
+                                  max_rounds=256, distance=2, seed=0,
+                                  scheme=scheme)
+                (view, st), t = _timeit(
+                    lambda: color_graph_sim(pg, order, cfg))
+                colors = colors_from_views(pg, np.asarray(view))
+                hashes[scheme] = _hash(colors)
+                row[f"color_{scheme}_s"] = t
+                row[f"color_{scheme}_wire_bytes"] = st["wire_bytes"]
+                row["d2_colors"] = st["n_colors"]
+                rcfg = RecolorConfig(max_colors=MC, distance=2, scheme=scheme)
+                key = jax.random.key(7)
+                (v2, st2), t2 = _timeit(
+                    lambda: recolor_sim(pg, view, "nd", rcfg, key=key))
+                row[f"recolor_{scheme}_s"] = t2
+                row[f"recolor_{scheme}_wire_bytes"] = st2["wire_bytes"]
+                row["d2_colors_rc"] = st2["n_colors"]
+            chk = check_coloring(g, colors, distance=2)
+            row["d2_valid"] = bool(chk["valid"])
+            row["colorings_identical"] = hashes["sparse"] == hashes["allgather"]
+            row["color_hash"] = hashes["sparse"]
+            row["bytes_reduction_color"] = 1.0 - (
+                row["color_sparse_wire_bytes"]
+                / max(row["color_allgather_wire_bytes"], 1))
+            row["bytes_reduction_recolor"] = 1.0 - (
+                row["recolor_sparse_wire_bytes"]
+                / max(row["recolor_allgather_wire_bytes"], 1))
+            rec["sweep"].append(row)
+            emit(f"d2/{gname}/P{P}/color_sparse",
+                 row["color_sparse_s"] * 1e6,
+                 f"bytes={row['color_sparse_wire_bytes']};"
+                 f"red={row['bytes_reduction_color']:.2f};"
+                 f"colors={row['d2_colors']};valid={row['d2_valid']};"
+                 f"identical={row['colorings_identical']}")
+            emit(f"d2/{gname}/P{P}/recolor_sparse",
+                 row["recolor_sparse_s"] * 1e6,
+                 f"bytes={row['recolor_sparse_wire_bytes']};"
+                 f"red={row['bytes_reduction_recolor']:.2f};"
+                 f"colors={row['d2_colors_rc']}")
+
+    Path(out_path).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    run()

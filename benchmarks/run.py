@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   kernel    color-selection kernels (oracle timing + pallas validation)
   hotpath   legacy scalar/dense vs ELL/bitset hot paths (BENCH_hotpath.json)
   comm      sparse vs all-gather exchange P-scaling sweep (BENCH_comm.json)
+  d2        distance-2 coloring over the two-hop halo (BENCH_d2.json)
   roofline  per-(arch x shape x mesh) roofline terms from the dry-run
 """
 import argparse
@@ -23,16 +24,17 @@ def main() -> None:
                     help="paper-scale graphs (slow); default is fast mode")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,seq,piggyback,dist,randomx,"
-                         "kernels,hotpath,comm,roofline")
+                         "kernels,hotpath,comm,d2,roofline")
     args = ap.parse_args()
     fast = not args.full
-    from benchmarks import (bench_comm, bench_distributed, bench_hotpath,
-                            bench_kernels, bench_piggyback, bench_randomx,
-                            bench_roofline, bench_seq_recolor, bench_tables)
+    from benchmarks import (bench_comm, bench_d2, bench_distributed,
+                            bench_hotpath, bench_kernels, bench_piggyback,
+                            bench_randomx, bench_roofline, bench_seq_recolor,
+                            bench_tables)
     mods = dict(tables=bench_tables, seq=bench_seq_recolor,
                 piggyback=bench_piggyback, dist=bench_distributed,
                 randomx=bench_randomx, kernels=bench_kernels,
-                hotpath=bench_hotpath, comm=bench_comm,
+                hotpath=bench_hotpath, comm=bench_comm, d2=bench_d2,
                 roofline=bench_roofline)
     chosen = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")

@@ -11,7 +11,7 @@ Public API:
   select_colors                                  — shared bitset color-selection
                                                    entry (Pallas/XLA backends)
 """
-from repro.kernels.ops import select_colors
+from repro.kernels.ops import select_colors, select_colors_d2
 
 from . import ordering, presets, rmat, selection
 from .comm import AXIS, SCHEMES, AxisComm, CommConfig, stats_to_host
@@ -34,5 +34,6 @@ __all__ = [
     "color_graph_sim", "color_spmd", "colors_from_views", "compute_order",
     "message_stats", "ordering", "partition_graph", "presets",
     "recolor_iterations", "recolor_sharded", "recolor_sim", "rmat",
-    "schedule_for_iteration", "select_colors", "selection", "stats_to_host",
+    "schedule_for_iteration", "select_colors", "select_colors_d2",
+    "selection", "stats_to_host",
 ]

@@ -30,6 +30,12 @@ into a leading-P axis for `SimComm`/`shard_map`):
   ``ppermute`` round schedule — the faithful analogue of the paper's
   neighbour-to-neighbour boundary messages, with wire bytes that track the
   realized cross-edge structure instead of P (DESIGN.md §2).
+
+  ``partition_graph(..., halo=2)`` widens everything to the *two-hop halo*
+  for distance-2 coloring (DESIGN.md §5): ghosts cover every remote vertex
+  within two hops, ``nbr2`` holds the strict two-hop ELL, and
+  ``boundary``/``is_internal`` mean "read by some other shard".  The comm
+  plan is halo-agnostic — depth-2 ghosts are ordinary ghost-table entries.
 """
 from __future__ import annotations
 
@@ -81,6 +87,75 @@ def _pad2(rows: list[np.ndarray], width: int, fill: int) -> np.ndarray:
     return out
 
 
+def _unique_pairs(a: np.ndarray, b: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Sort index pairs by (a, b) and drop duplicates — no packed keys."""
+    order = np.lexsort((b, a))
+    a, b = a[order], b[order]
+    keep = np.empty(a.shape[0], dtype=bool)
+    keep[:1] = True
+    keep[1:] = (a[1:] != a[:-1]) | (b[1:] != b[:-1])
+    return a[keep], b[keep]
+
+
+def _pair_diff(a2: np.ndarray, b2: np.ndarray, a1: np.ndarray,
+               b1: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Set-difference of *deduped* pair lists: (a2, b2) minus (a1, b1).
+
+    One lexsort over the concatenation with a membership tag: a pair of the
+    second list survives unless the (unique) copy from the first list sorts
+    immediately before it.  Output stays sorted by (a, b).
+    """
+    a = np.concatenate([a1, a2])
+    b = np.concatenate([b1, b2])
+    tag = np.concatenate([np.zeros(a1.shape[0], bool),
+                          np.ones(a2.shape[0], bool)])
+    order = np.lexsort((tag, b, a))
+    a, b, tag = a[order], b[order], tag[order]
+    dup = np.zeros(a.shape[0], bool)
+    dup[1:] = (a[1:] == a[:-1]) & (b[1:] == b[:-1])
+    keep = tag & ~dup
+    return a[keep], b[keep]
+
+
+def _two_hop_pairs(g: Graph, lo: int, row: np.ndarray, nbrs: np.ndarray,
+                   chunk_paths: int = 1 << 22
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Unique (local row, global id) pairs at graph distance exactly 2.
+
+    Expands every length-2 path v -> w -> u from the block's vertices v (the
+    middle vertex w may be local or remote), then drops u == v and the pairs
+    already adjacent — the direct neighbourhood lives in ``nbr`` and the D2
+    kernels OR both bitsets, so keeping strict two-hop rows only is what
+    bounds the ELL width.  The expansion is chunked (a hub of degree d
+    contributes d² raw paths) with an incremental dedup, so peak host memory
+    tracks the deduped two-hop set plus ``chunk_paths``, not the raw path
+    count.
+    """
+    deg = (g.indptr[nbrs + 1] - g.indptr[nbrs]).astype(np.int64)
+    cum = np.cumsum(deg)
+    row2 = np.empty(0, np.int64)
+    nb2 = np.empty(0, np.int64)
+    start = 0
+    while start < nbrs.shape[0]:
+        base = cum[start - 1] if start else 0
+        end = max(start + 1, int(np.searchsorted(cum, base + chunk_paths,
+                                                 side="right")))
+        end = min(end, nbrs.shape[0])
+        w, d = nbrs[start:end], deg[start:end]
+        starts = g.indptr[w].astype(np.int64)
+        offs2 = np.cumsum(d) - d
+        pos = np.arange(int(d.sum()), dtype=np.int64) - np.repeat(offs2, d)
+        u = g.indices[np.repeat(starts, d) + pos].astype(np.int64)
+        v = np.repeat(row[start:end].astype(np.int64), d)
+        keep = u != v + lo
+        row2, nb2 = _unique_pairs(np.concatenate([row2, v[keep]]),
+                                  np.concatenate([nb2, u[keep]]))
+        start = end
+    row2, nb2 = _pair_diff(row2, nb2, row.astype(np.int64),
+                           nbrs.astype(np.int64))
+    return row2.astype(np.int32), nb2.astype(np.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class CommPlan:
     """Static sparse-exchange schedule (paper's neighbour-to-neighbour sends).
@@ -117,9 +192,17 @@ class CommPlan:
         return dict(send_slot=self.send_slot, ghost_shift=self.ghost_shift,
                     ghost_pos=self.ghost_pos, shift_to_round=self.shift_to_round)
 
-    def bytes_per_exchange(self, itemsize: int = 4) -> int:
-        """Per-shard wire bytes of one full sparse exchange."""
-        return int(sum(self.widths)) * itemsize
+    def bytes_per_exchange(self, itemsize: int = 4, round_mask=None) -> int:
+        """Per-shard wire bytes of one sparse exchange.
+
+        ``round_mask`` (bool per round) models a partial exchange — the cost
+        of shipping only the masked ``ppermute`` rounds (recolor's per-link
+        piggybacking); ``None`` means a full exchange.
+        """
+        if round_mask is None:
+            return int(sum(self.widths)) * itemsize
+        return int(sum(w for w, m in zip(self.widths, round_mask) if m)) \
+            * itemsize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +234,10 @@ class PartitionedGraph:
     prio: np.ndarray           # (P, n_slots) random tie-break priority, pad=-1
     is_internal: np.ndarray    # (P, n_local_max) bool
     degree: np.ndarray         # (P, n_local_max) int32 local-graph-visible degree
+    halo: int = 1              # ghost depth: 1 (D1) or 2 (two-hop halo, D2)
+    maxd2: int = 0             # max strict-two-hop row width (halo=2 only)
+    nbr2: np.ndarray | None = None  # (P, n_local_max, maxd2) two-hop ELL
+                                    # slot ids, pad=sentinel (halo=2 only)
 
     @property
     def n_slots(self) -> int:
@@ -190,6 +277,8 @@ class PartitionedGraph:
             is_internal=self.is_internal,
             degree=self.degree,
         )
+        if self.nbr2 is not None:
+            out["nbr2"] = self.nbr2
         if sparse:
             out.update(self.comm_plan.arrays())
         return out
@@ -204,12 +293,21 @@ class PartitionedGraph:
 
 
 def partition_graph(g: Graph, P: int, *, seed: int = 0,
-                    permute: bool = False) -> PartitionedGraph:
+                    permute: bool = False, halo: int = 1) -> PartitionedGraph:
     """Block-partition `g` onto P processors and build the device layout.
 
     ``permute=True`` applies a random vertex permutation first (a stand-in for
     a different partitioner; block partitioning on RMAT matches the paper).
+
+    ``halo=2`` builds the two-hop halo for distance-2 coloring: the ghost
+    tables extend to every remote vertex within two hops, ``nbr2`` carries the
+    strict two-hop neighbourhood in ELL form, and ``boundary``/``is_internal``
+    widen to "this color is read by some other shard".  The comm plan and both
+    exchange schemes are halo-agnostic — depth-2 ghosts are ordinary
+    ghost-table entries (sorted by global id, hence owner-contiguous) and ride
+    the same ring-shift ``ppermute`` schedule.
     """
+    assert halo in (1, 2), f"halo must be 1 or 2, got {halo}"
     rng = np.random.default_rng(seed)
     if permute:
         perm = rng.permutation(g.n).astype(np.int32)
@@ -232,30 +330,55 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     n_local = (offs[1:] - offs[:-1]).astype(np.int32)
     n_local_max = int(n_local.max())
 
+    # pass 1: per-shard edge slices, halo sets (the remote vertices whose
+    # colors this shard reads) and, at halo=2, the strict two-hop pair lists
+    ghosts_of: list[np.ndarray] = []
+    edge_of: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    hop2: list[tuple[np.ndarray, np.ndarray, np.ndarray] | None] = []
+    for p in range(P):
+        lo, hi = int(offs[p]), int(offs[p + 1])
+        nl = hi - lo
+        nbrs = g.indices[g.indptr[lo] : g.indptr[hi]]
+        row = np.repeat(np.arange(nl, dtype=np.int32),
+                        np.diff(g.indptr[lo : hi + 1]).astype(np.int32))
+        remote = (nbrs < lo) | (nbrs >= hi)
+        edge_of.append((nbrs, row, remote))
+        if halo == 1:
+            # ghosts: unique remote neighbours (searchsorted-friendly order)
+            ghosts_of.append(np.unique(nbrs[remote]))
+            hop2.append(None)
+        else:
+            row2, nb2 = _two_hop_pairs(g, lo, row, nbrs)
+            rem2 = (nb2 < lo) | (nb2 >= hi)
+            ghosts_of.append(np.unique(np.concatenate(
+                [nbrs[remote], nb2[rem2]])))
+            hop2.append((row2, nb2, rem2))
+
+    # boundary = local vertices some other shard reads, i.e. members of
+    # another shard's halo set.  At halo=1 this is exactly "has a remote
+    # neighbour" (the adjacency is symmetric); at halo=2 it widens to the
+    # two-hop fringe.
+    read_remote = np.zeros(g.n, dtype=bool)
+    for gh in ghosts_of:
+        read_remote[gh] = True
+
     rows_indptr, rows_indices, rows_src = [], [], []
-    rows_boundary, rows_gowner, rows_gslot = [], [], []
-    rows_gvid, rows_prio, rows_internal, rows_degree = [], [], [], []
+    rows_boundary, rows_gowner = [], []
+    rows_internal, rows_degree = [], []
     n_ghost = np.zeros(P, dtype=np.int32)
     n_boundary = np.zeros(P, dtype=np.int32)
 
     for p in range(P):
         lo, hi = int(offs[p]), int(offs[p + 1])
         nl = hi - lo
-        s, e = g.indptr[lo], g.indptr[hi]
-        nbrs = g.indices[s:e]
-        row = np.repeat(np.arange(nl, dtype=np.int32),
-                        np.diff(g.indptr[lo : hi + 1]).astype(np.int32))
-        remote = (nbrs < lo) | (nbrs >= hi)
-        # ghosts: unique remote neighbours (searchsorted keeps this vectorized)
-        gh = np.unique(nbrs[remote])
+        nbrs, row, remote = edge_of[p]
+        gh = ghosts_of[p]
         slots = np.where(remote, 0, nbrs - lo).astype(np.int32)
         if remote.any():
             slots[remote] = (n_local_max
                              + np.searchsorted(gh, nbrs[remote])).astype(
                                  np.int32)
-        # boundary = local vertices with >=1 remote neighbour
-        is_bnd = np.zeros(nl, dtype=bool)
-        np.logical_or.at(is_bnd, row[remote], True)
+        is_bnd = read_remote[lo:hi].copy()
         bnd = np.nonzero(is_bnd)[0].astype(np.int32)
         n_boundary[p] = len(bnd)
         n_ghost[p] = len(gh)
@@ -266,10 +389,8 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
         rows_boundary.append(bnd)
         gowner = owner_of[gh].astype(np.int32) if len(gh) else np.zeros(0, np.int32)
         rows_gowner.append(gowner)
-        rows_gvid.append((gh, lo, nl))
         rows_internal.append(~is_bnd)
         rows_degree.append(np.diff(g.indptr[lo : hi + 1]).astype(np.int32))
-        rows_gslot.append(gh)  # resolved below once all boundary lists exist
 
     # Resolve ghost -> (owner, slot-in-owner-boundary-payload) via one global
     # boundary-slot table (vectorized; P=512 × millions of edges stays fast).
@@ -278,7 +399,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
         lo = int(offs[p])
         bslot_global[rows_boundary[p] + lo] = np.arange(
             len(rows_boundary[p]), dtype=np.int32)
-    gslot_rows = [bslot_global[gh] for gh in rows_gslot]
+    gslot_rows = [bslot_global[gh] for gh in ghosts_of]
 
     max_ghost = max(1, int(n_ghost.max()))
     max_boundary = max(1, int(n_boundary.max()))
@@ -295,7 +416,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
         nl = int(n_local[p])
         indptr[p, 1 : nl + 1] = np.cumsum(rows_indptr[p])
         indptr[p, nl + 1 :] = indptr[p, nl]
-        gh, lo, _ = rows_gvid[p]
+        gh, lo = ghosts_of[p], int(offs[p])
         gvid[p, :nl] = np.arange(lo, lo + nl, dtype=np.int32)
         gvid[p, n_local_max : n_local_max + len(gh)] = gh
         prio[p, :nl] = prio_global[lo : lo + nl]
@@ -322,6 +443,31 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     ghost_owner = _pad2(rows_gowner, max_ghost, 0)
     ghost_slot = _pad2(gslot_rows, max_ghost, 0)
 
+    # strict two-hop ELL (halo=2): nbr2[p, v, k] = k-th distance-2 slot of v.
+    # Rows come pre-sorted by (v, global id) from _two_hop_pairs, so each
+    # vertex's entries are one contiguous run.
+    maxd2, nbr2 = 0, None
+    if halo == 2:
+        slot2_rows = []
+        for p in range(P):
+            lo = int(offs[p])
+            row2, nb2, rem2 = hop2[p]
+            slot2 = np.where(rem2, 0, nb2 - lo).astype(np.int32)
+            if rem2.any():
+                slot2[rem2] = (n_local_max + np.searchsorted(
+                    ghosts_of[p], nb2[rem2])).astype(np.int32)
+            slot2_rows.append((row2, slot2))
+            cnt = np.bincount(row2, minlength=1)
+            maxd2 = max(maxd2, int(cnt.max(initial=0)))
+        maxd2 = max(1, maxd2)
+        nbr2 = np.full((P, n_local_max, maxd2), sentinel, dtype=np.int32)
+        for p in range(P):
+            row2, slot2 = slot2_rows[p]
+            cnt = np.bincount(row2, minlength=n_local_max).astype(np.int64)
+            starts2 = np.concatenate([[0], np.cumsum(cnt)])[:-1]
+            col = np.arange(len(row2), dtype=np.int64) - starts2[row2]
+            nbr2[p, row2, col] = slot2
+
     return PartitionedGraph(
         P=P, n_global=g.n, n_local_max=n_local_max, max_ghost=max_ghost,
         max_boundary=max_boundary, m_local_max=m_local_max, maxd=maxd,
@@ -329,6 +475,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
         indptr=indptr, indices=indices, nbr=nbr, edge_src=edge_src,
         boundary=boundary, ghost_owner=ghost_owner, ghost_slot=ghost_slot,
         gvid=gvid, prio=prio, is_internal=is_internal, degree=degree,
+        halo=halo, maxd2=maxd2, nbr2=nbr2,
     )
 
 

@@ -34,6 +34,14 @@ still needs.
 
 Asynchronous recoloring (aRC, §3): each shard *locally* orders vertices by
 color class and reruns the speculative framework (conflicts possible).
+
+Distance-2 mode (``RecolorConfig(distance=2)``, DESIGN.md §5): a class of a
+valid D2 coloring is a distance-2 independent set, so the step stays
+conflict-free; selection ORs the two-hop bitset and the piggyback schedule
+gains the two-hop ELL rows as a second dependency source
+(``_cross_deps_ell``) — a D2 reader consumes its two-hop ghosts' colors too.
+Partial seed colorings need no flag here: uncolored vertices are class 0,
+which every permutation ranks 0 and the step loop skips unconditionally.
 """
 from __future__ import annotations
 
@@ -45,9 +53,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
-from .comm import (AXIS, SCHEMES, SPARSE, AxisComm, CommConfig,
-                   exchange_boundary, make_exchange, run_sharded, run_sim,
-                   stats_to_host)
+from .comm import (AXIS, DEFAULT_SCHEME, SCHEMES, SPARSE, AxisComm,
+                   CommConfig, exchange_boundary, make_exchange, run_sharded,
+                   run_sim, stats_to_host)
 from .graph import PartitionedGraph
 from .speculative import (ColorConfig, _compact_order, _plan_static,
                           color_spmd, validate_color_bounds)
@@ -65,16 +73,22 @@ class RecolorConfig:
 
     max_colors: int = 1024         # bound on colors of the SEED coloring
     piggyback: bool = True         # paper §3.1 (False = exchange every step)
-    scheme: str = SPARSE           # boundary exchange: "sparse" | "allgather"
+    scheme: str = DEFAULT_SCHEME   # boundary exchange: "sparse" | "allgather"
+                                   # (default follows $REPRO_SCHEME, see comm)
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
     chunk: int = 256               # vertices selected per chunk (ELL tile rows)
     backend: str = "auto"          # kernels.ops backend: auto | xla | pallas
+    distance: int = 1              # 1 = proper; 2 = distance-2 recoloring
+                                   # (needs a halo=2 PartitionedGraph and a
+                                   # valid D2 seed coloring — classes must be
+                                   # distance-2 independent sets)
     seed: int = 0
 
     def __post_init__(self):
         validate_color_bounds(self.max_colors, self.wire16, self.backend)
         assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
         assert self.chunk > 0
+        assert self.distance in (1, 2), f"bad distance {self.distance}"
 
     @property
     def n_words(self) -> int:
@@ -140,16 +154,40 @@ def _cross_deps(step_of, arrs, n_local_max):
     return dep, s_v, jnp.maximum(dst - n_local_max, 0)
 
 
+def _cross_deps_ell(step_of, nbr2, n_local_max):
+    """Cross deps over the flattened two-hop ELL rows (distance=2 readers).
+
+    A D2 reader also consumes its two-hop ghosts' colors, so those pairs
+    constrain the piggyback schedule exactly like the CSR cross edges; padded
+    entries point at the sentinel (step 0) and never form a dependency.
+    """
+    dst = nbr2.reshape(-1)
+    s_v = jnp.repeat(step_of[:n_local_max], nbr2.shape[1])
+    s_u = step_of[dst]
+    is_ghost = (dst >= n_local_max) & (dst < step_of.shape[0] - 1)
+    dep = is_ghost & (s_u > 0) & (s_v > s_u)
+    return dep, s_v, jnp.maximum(dst - n_local_max, 0)
+
+
+def _dep_sources(step_of, arrs, n_local_max, distance):
+    """All (dep, s_v, ghost index) contributions the piggyback schedule sees."""
+    deps = [_cross_deps(step_of, arrs, n_local_max)]
+    if distance == 2:
+        deps.append(_cross_deps_ell(step_of, arrs["nbr2"], n_local_max))
+    return deps
+
+
 def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
-                      comm: AxisComm, piggyback: bool):
+                      comm: AxisComm, piggyback: bool, distance: int = 1):
     """The piggybacking schedule: needed[t] = exchange event after step t.
 
     Entry K is the end-of-iteration exchange (always on).
     """
-    dep, s_v, _ = _cross_deps(step_of, arrs, n_local_max)
     if piggyback:
-        idx = jnp.where(dep, s_v - 1, 0)
-        needed = jnp.zeros((max_colors + 1,), bool).at[idx].max(dep)
+        needed = jnp.zeros((max_colors + 1,), bool)
+        for dep, s_v, _ in _dep_sources(step_of, arrs, n_local_max, distance):
+            idx = jnp.where(dep, s_v - 1, 0)
+            needed = needed.at[idx].max(dep)
         needed = needed.at[0].set(False)
         needed = comm.pmax(needed)                   # pre-communication
     else:
@@ -160,23 +198,25 @@ def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
 
 def _needed_exchange_rounds(step_of, arrs, n_local_max, K, max_colors,
                             comm: AxisComm, piggyback: bool, P_size: int,
-                            n_rounds: int):
+                            n_rounds: int, distance: int = 1):
     """Sparse piggybacking: needed[t, r] = ``ppermute`` round r after step t.
 
     The paper's pre-communication ("who receives at which step") refined per
     *link*: each dependency marks only the ring shift of its writer's owner,
     so an exchange event ships only the rounds some destination still needs.
-    Row ``max_colors`` (end of iteration) runs every round — it leaves all
+    At ``distance=2`` the two-hop ELL rows contribute dependencies too.  Row
+    ``max_colors`` (end of iteration) runs every round — it leaves all
     ghosts fresh for the next iteration.
     """
-    dep, s_v, gi = _cross_deps(step_of, arrs, n_local_max)
-    shift = (comm.index() - arrs["ghost_owner"][gi]) % P_size
-    rnd = arrs["shift_to_round"][shift]              # >= 0 wherever dep holds
     if piggyback:
-        idx = jnp.where(dep, s_v - 1, 0)
-        rdx = jnp.where(dep, rnd, 0)
-        needed = jnp.zeros((max_colors + 1, max(n_rounds, 1)),
-                           bool).at[idx, rdx].max(dep)[:, :n_rounds]
+        needed = jnp.zeros((max_colors + 1, max(n_rounds, 1)), bool)
+        for dep, s_v, gi in _dep_sources(step_of, arrs, n_local_max, distance):
+            shift = (comm.index() - arrs["ghost_owner"][gi]) % P_size
+            rnd = arrs["shift_to_round"][shift]      # >= 0 wherever dep holds
+            idx = jnp.where(dep, s_v - 1, 0)
+            rdx = jnp.where(dep, rnd, 0)
+            needed = needed.at[idx, rdx].max(dep)
+        needed = needed[:, :n_rounds]
         needed = needed.at[0].set(False)
         needed = comm.pmax(needed)                   # pre-communication
     else:
@@ -219,6 +259,9 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
     if sparse and (P_size is None or plan_static is None):
         raise ValueError("sparse scheme needs P_size and plan_static "
                          "(see PartitionedGraph.comm_plan)")
+    if cfg.distance == 2 and "nbr2" not in arrs:
+        raise ValueError("distance=2 needs the two-hop halo: partition with "
+                         "partition_graph(g, P, halo=2)")
 
     sizes = class_sizes(view, n_local, n_local_max, mc, comm)
     n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
@@ -230,13 +273,13 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
         n_rounds = len(plan_static[0])
         needed_rounds = _needed_exchange_rounds(
             step_of, arrs, n_local_max, n_classes, mc, comm, cfg.piggyback,
-            P_size, n_rounds)
+            P_size, n_rounds, cfg.distance)
         # event bitmap = any round pending (one dep scan + pmax, not two);
         # entry mc stays on so event counting matches the broadcast scheme
         needed = needed_rounds.any(axis=1).at[mc].set(True)
     else:
         needed = _needed_exchanges(step_of, arrs, n_local_max, n_classes, mc,
-                                   comm, cfg.piggyback)
+                                   comm, cfg.piggyback, cfg.distance)
 
     exchange = make_exchange(arrs, n_local_max, P_size, comm,
                              cfg.comm_config, plan_static)
@@ -269,9 +312,14 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
         rows = jax.lax.dynamic_slice(sorted_pad, (pos,), (chunk,))
         rows = jnp.where(active, rows, 0)
         nbr_colors = new_view[nbr[rows]]                 # (chunk, maxd) gather
-        colors = ops.select_colors(nbr_colors, active, max_colors=mc,
-                                   selection=ops.FIRST_FIT,
-                                   backend=cfg.backend)
+        if cfg.distance == 2:
+            colors = ops.select_colors_d2(
+                nbr_colors, new_view[arrs["nbr2"][rows]], active,
+                max_colors=mc, selection=ops.FIRST_FIT, backend=cfg.backend)
+        else:
+            colors = ops.select_colors(nbr_colors, active, max_colors=mc,
+                                       selection=ops.FIRST_FIT,
+                                       backend=cfg.backend)
         idx = jnp.where(active, rows, n_slots - 1)       # park writes on the
         val = jnp.where(active, colors, 0)               # sentinel (stays 0)
         new_view = new_view.at[idx].set(val.astype(new_view.dtype))

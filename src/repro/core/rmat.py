@@ -14,22 +14,31 @@ from __future__ import annotations
 
 import numpy as np
 
-from .graph import Graph
+from .graph import Graph, _unique_pairs
+
+
+def _dedup_edges(u: np.ndarray, v: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Sort directed edges by (u, v) and drop duplicates.
+
+    Lexsort-based on purpose: the former packed key ``u * n + v`` overflows
+    int64 once ``n`` reaches 2**32 (RMAT scale >= 32) — the wrapped keys still
+    dedup (the packing is injective mod 2**64) but decode back to *negative*
+    endpoints, corrupting the CSR. Sorting the coordinate pairs directly has
+    no packing step to overflow.
+    """
+    return _unique_pairs(u, v)
 
 
 def _edges_to_graph(n: int, src: np.ndarray, dst: np.ndarray) -> Graph:
     """Symmetrize + dedup an edge list into CSR."""
+    # Graph.indices is int32 — that storage bound, not the dedup, is what
+    # caps the vertex count; fail loudly instead of wrapping ids negative.
+    assert n <= 2**31, f"n={n} exceeds the int32 CSR id range"
     keep = src != dst
     src, dst = src[keep], dst[keep]
-    u = np.concatenate([src, dst])
-    v = np.concatenate([dst, src])
-    # dedup via sort on 64-bit keys
-    key = u.astype(np.int64) * n + v.astype(np.int64)
-    key = np.unique(key)
-    u = (key // n).astype(np.int32)
-    v = (key % n).astype(np.int32)
+    u, v = _dedup_edges(np.concatenate([src, dst]), np.concatenate([dst, src]))
     indptr = np.zeros(n + 1, dtype=np.int64)
-    np.add.at(indptr, u + 1, 1)
+    np.add.at(indptr, u.astype(np.int64) + 1, 1)
     indptr = np.cumsum(indptr)
     return Graph(n=n, indptr=indptr.astype(np.int64), indices=v.astype(np.int32))
 
@@ -58,7 +67,9 @@ def rmat(
         down = ((r >= a) & (r < a + b)) | (r >= a + b + c)
         src = src * 2 + right.astype(np.int64)
         dst = dst * 2 + down.astype(np.int64)
-    return _edges_to_graph(n, src.astype(np.int32), dst.astype(np.int32))
+    # ids stay int64 through the dedup; _edges_to_graph guards the int32
+    # CSR bound (scale 31 is the hard ceiling of the storage format)
+    return _edges_to_graph(n, src, dst)
 
 
 def rmat_er(scale: int, edge_factor: int = 8, seed: int = 0) -> Graph:

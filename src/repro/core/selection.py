@@ -34,9 +34,16 @@ def set_bit(words: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
 
 
 def find_first_zero(words: jnp.ndarray) -> jnp.ndarray:
-    """Index of the lowest zero bit; `32*W - 1` if the set is full."""
-    free = ~words
+    """Index of the lowest zero bit below the sentinel; `32*W - 1` if none.
+
+    The top bit (color ``32*W - 1``) is *reserved as a saturation sentinel*:
+    it is never reported as free, so a return value of ``32*W - 1`` always
+    means "no permissible color".  Without the reservation the same value was
+    ambiguous ("full" vs "the last bit is genuinely free"), which made
+    ``staggered`` wrap below its offset when color ``32*W - 1`` was legal.
+    """
     W = words.shape[0]
+    free = (~words).at[W - 1].set(~words[W - 1] & jnp.uint32(0x7FFFFFFF))
     has = free != 0
     widx = jnp.min(jnp.where(has, jnp.arange(W), W))
     widx_c = jnp.minimum(widx, W - 1)
@@ -75,13 +82,16 @@ def least_used(words, usage):
 
     Ties break to the smaller color. Restricting to already-used colors keeps
     the strategy from opening a new color when an existing one is permissible
-    (the "(locally) least used color so far" of §2.1).
+    (the "(locally) least used color so far" of §2.1).  The top color
+    ``mc - 1`` is the saturation sentinel (see ``find_first_zero``) and is
+    never handed out, even if a saturated clamp put it in ``usage``.
     """
     mc = usage.shape[0]
     bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & UINT1
     forbidden = bits.reshape(-1)[:mc].astype(bool)
     big = jnp.iinfo(jnp.int32).max
-    key = jnp.where(forbidden | (usage == 0), big, usage)
+    key = jnp.where(forbidden | (usage == 0)
+                    | (jnp.arange(mc) == mc - 1), big, usage)
     best = jnp.lexsort((jnp.arange(mc, dtype=jnp.int32), key))[0]
     none_open = key[best] == big
     return jnp.where(none_open, find_first_zero(words),

@@ -51,6 +51,13 @@ Communication scaling (this file + comm.py/graph.py, DESIGN.md §2):
 The same function serves initial coloring (any order, any selection strategy
 incl. Random-X Fit) and the aRC second pass (order derived from a previous
 coloring's classes).
+
+Distance-2 mode (``ColorConfig(distance=2)``, DESIGN.md §5): on a halo=2
+partition the selection ORs the one-hop and two-hop forbidden bitsets
+(``ops.select_colors_d2``) and conflict detection scans both ELL tiles; the
+round/repair structure is unchanged.  ``partial=True`` + ``marked=`` on the
+drivers colors only a marked subset (bipartite partial D2 coloring) —
+unmarked vertices stay at color 0, invisible to every bitset.
 """
 from __future__ import annotations
 
@@ -59,12 +66,14 @@ from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 
 from . import selection as sel
-from .comm import (AXIS, SCHEMES, SPARSE, AxisComm, CommConfig,
-                   make_exchange, run_sharded, run_sim, stats_to_host)
+from .comm import (AXIS, DEFAULT_SCHEME, SCHEMES, SPARSE, AxisComm,
+                   CommConfig, make_exchange, run_sharded, run_sim,
+                   stats_to_host)
 from .graph import PartitionedGraph
 
 
@@ -91,7 +100,8 @@ class ColorConfig:
     stagger_estimate: int = 64     # initial color estimate for Staggered FF
     exchange_every: int = 1        # 1 = synchronous; k>1 = bounded staleness
     max_rounds: int = 64
-    scheme: str = SPARSE           # boundary exchange: "sparse" | "allgather"
+    scheme: str = DEFAULT_SCHEME   # boundary exchange: "sparse" | "allgather"
+                                   # (default follows $REPRO_SCHEME, see comm)
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
     parallel_chunk: bool = True    # tile-parallel supersteps (False = paper's
                                    # sequential scalar loop, bitwise-preserved)
@@ -99,12 +109,18 @@ class ColorConfig:
                                    # superstep; bounds speculative conflicts
                                    # while `superstep` keeps the comm cadence
     backend: str = "auto"          # kernels.ops backend: auto | xla | pallas
+    distance: int = 1              # 1 = proper coloring; 2 = distance-2
+                                   # (needs a halo=2 PartitionedGraph)
+    partial: bool = False          # color only a marked vertex subset
+                                   # (drivers take ``marked=``; bipartite
+                                   # partial D2 coloring of Taş et al.)
     seed: int = 0
 
     def __post_init__(self):
         validate_color_bounds(self.max_colors, self.wire16, self.backend)
         assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
         assert self.tile > 0
+        assert self.distance in (1, 2), f"bad distance {self.distance}"
 
     @property
     def n_words(self) -> int:
@@ -134,6 +150,18 @@ def _forbidden_words(view, indptr, indices, v, n_words):
     return jax.lax.fori_loop(indptr[v], indptr[v + 1], body, words)
 
 
+def _forbid_ell_row(view, row, words):
+    """OR the colors along one sentinel-padded ELL row into the bitset.
+
+    Padding points at the sentinel slot (color 0 = bit 0, always set), so no
+    masking is needed — used for the two-hop row in the sequential D2 path.
+    """
+    def body(k, words):
+        return sel.set_bit(words, view[row[k]])
+
+    return jax.lax.fori_loop(0, row.shape[0], body, words)
+
+
 def _pick_color(words, usage, v_rand, p_idx, cfg: ColorConfig):
     if cfg.selection == sel.FIRST_FIT:
         return sel.first_fit(words)
@@ -160,6 +188,8 @@ def _greedy_chunk(view, usage, order, rand_u32, start, count, arrs, p_idx,
         def color_one(args):
             view, usage = args
             words = _forbidden_words(view, indptr, indices, v_safe, cfg.n_words)
+            if cfg.distance == 2:
+                words = _forbid_ell_row(view, arrs["nbr2"][v_safe], words)
             c = _pick_color(words, usage, rand_u32[v_safe], p_idx, cfg)
             c = jnp.minimum(c, cfg.max_colors - 1).astype(jnp.int32)
             return view.at[v_safe].set(c), usage.at[c].add(1)
@@ -193,10 +223,17 @@ def _parallel_chunk(view, usage, order_pad, rand_u32, start, arrs, p_idx,
         v_safe = jnp.maximum(chunk, 0)
         active = (chunk >= 0) & (view[v_safe] == 0)
         nbr_colors = view[arrs["nbr"][v_safe]]       # (tile, maxd)
-        colors = ops.select_colors(
-            nbr_colors, active, rand_u32[v_safe], max_colors=cfg.max_colors,
-            selection=cfg.selection, x=cfg.random_x, offset=offset,
-            backend=cfg.backend)
+        if cfg.distance == 2:
+            colors = ops.select_colors_d2(
+                nbr_colors, view[arrs["nbr2"][v_safe]], active,
+                rand_u32[v_safe], max_colors=cfg.max_colors,
+                selection=cfg.selection, x=cfg.random_x, offset=offset,
+                backend=cfg.backend)
+        else:
+            colors = ops.select_colors(
+                nbr_colors, active, rand_u32[v_safe],
+                max_colors=cfg.max_colors, selection=cfg.selection,
+                x=cfg.random_x, offset=offset, backend=cfg.backend)
         colors = jnp.minimum(colors, cfg.max_colors - 1).astype(jnp.int32)
         idx = jnp.where(active, v_safe, n_slots - 1)   # park writes on the
         val = jnp.where(active, colors, 0)             # sentinel (stays 0)
@@ -209,7 +246,8 @@ def _parallel_chunk(view, usage, order_pad, rand_u32, start, arrs, p_idx,
 
 
 def _detect_conflicts_frontier(view, arrs, order_pad, n_steps, n_need,
-                               superstep: int, backend="auto"):
+                               superstep: int, backend="auto",
+                               distance: int = 1):
     """Uncolor the lower-priority endpoint of every same-color frontier edge.
 
     Chunked over the round's visit order: only the ``n_need`` vertices
@@ -217,7 +255,10 @@ def _detect_conflicts_frontier(view, arrs, order_pad, n_steps, n_need,
     caller, so the trip count is shard-uniform and *shrinks* with the
     conflict frontier).  Every chunk reads the same pre-detection ``view`` —
     identical results to one full-width pass — and writes uncolorings into a
-    separate copy.  Returns (new_view, n_conflicts, any_boundary_conflict).
+    separate copy.  ``distance=2`` additionally scans the two-hop ELL rows
+    (both endpoints of a distance-2 conflict list each other in ``nbr2``, so
+    the repair argument is unchanged).  Returns (new_view, n_conflicts,
+    any_boundary_conflict).
     """
     nbr, prio, is_internal = arrs["nbr"], arrs["prio"], arrs["is_internal"]
     n_slots = view.shape[0]
@@ -229,9 +270,16 @@ def _detect_conflicts_frontier(view, arrs, order_pad, n_steps, n_need,
         pos = si * superstep + jnp.arange(superstep, dtype=jnp.int32)
         active = (rows >= 0) & (pos < n_need)
         r_safe = jnp.maximum(rows, 0)
-        conf = ops.detect_conflicts(view[r_safe], prio[r_safe],
-                                    view[nbr[r_safe]], prio[nbr[r_safe]],
-                                    active, backend=backend)
+        if distance == 2:
+            nbr2 = arrs["nbr2"]
+            conf = ops.detect_conflicts_d2(
+                view[r_safe], prio[r_safe], view[nbr[r_safe]],
+                prio[nbr[r_safe]], view[nbr2[r_safe]], prio[nbr2[r_safe]],
+                active, backend=backend)
+        else:
+            conf = ops.detect_conflicts(view[r_safe], prio[r_safe],
+                                        view[nbr[r_safe]], prio[nbr[r_safe]],
+                                        active, backend=backend)
         idx = jnp.where(conf, r_safe, n_slots - 1)   # sentinel stays 0
         new_view = new_view.at[idx].set(0)
         n_conf = n_conf + jnp.sum(conf, dtype=jnp.int32)
@@ -270,6 +318,9 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
     if cfg.scheme == SPARSE and (P_size is None or plan_static is None):
         raise ValueError("sparse scheme needs P_size and plan_static "
                          "(see PartitionedGraph.comm_plan)")
+    if cfg.distance == 2 and "nbr2" not in arrs:
+        raise ValueError("distance=2 needs the two-hop halo: partition with "
+                         "partition_graph(g, P, halo=2)")
 
     exchange = make_exchange(arrs, n_local_max, P_size, comm,
                              cfg.comm_config, plan_static)
@@ -320,7 +371,8 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
             0, n_steps, superstep,
             (view, usage, n_ex, n_bytes, jnp.bool_(False)))
         view, n_conf, bnd_conf = _detect_conflicts_frontier(
-            view, arrs, order_pad, n_steps, n_need, S, backend=cfg.backend)
+            view, arrs, order_pad, n_steps, n_need, S, backend=cfg.backend,
+            distance=cfg.distance)
         # publish uncolorings only if a boundary vertex lost somewhere
         do_final = comm.pmax(bnd_conf)
         view, b = jax.lax.cond(do_final, exchange, no_ex, view)
@@ -358,25 +410,46 @@ def _plan_static(pg: PartitionedGraph, cfg) -> tuple | None:
     return pg.comm_plan.static if cfg.scheme == SPARSE else None
 
 
+def _apply_partial(order, cfg: ColorConfig, marked):
+    """Mask the visit order down to the marked subset (``cfg.partial``).
+
+    ``marked`` is a host-side (P, n_local_max) bool mask of local slots;
+    unmarked vertices become ``-1`` entries (skipped everywhere), stay at
+    color 0, and — color 0 being invisible to the forbidden bitsets — act
+    exactly like the uncolored through-vertices of partial/bipartite D2
+    coloring.
+    """
+    if not cfg.partial:
+        assert marked is None, "marked= requires partial=True on the config"
+        return order
+    assert marked is not None, "partial=True needs a marked= (P, n_local) mask"
+    order = np.asarray(order)
+    marked = np.asarray(marked, dtype=bool)
+    keep = np.take_along_axis(marked, np.maximum(order, 0), axis=1)
+    return np.where((order >= 0) & keep, order, -1)
+
+
 def color_graph_sim(pg: PartitionedGraph, order, cfg: ColorConfig,
-                    key=None):
+                    key=None, *, marked=None):
     """Run distributed coloring *simulated* on one device (P vmap lanes)."""
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
         key = jax.random.key(cfg.seed)
+    order = _apply_partial(order, cfg, marked)
     view, stats = _sim_fn(pg.P, cfg, _plan_static(pg, cfg))(
         arrs, jnp.asarray(order), key)
     return view, stats_to_host(stats)
 
 
 def color_graph_sharded(pg: PartitionedGraph, order, cfg: ColorConfig, mesh,
-                        key=None):
+                        key=None, *, marked=None):
     """Run distributed coloring on a real mesh axis ``workers``."""
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
         key = jax.random.key(cfg.seed)
+    order = _apply_partial(order, cfg, marked)
     fn = partial(color_spmd, cfg=cfg, P_size=pg.P,
                  plan_static=_plan_static(pg, cfg))
     view, stats = jax.jit(

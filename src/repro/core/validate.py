@@ -12,25 +12,76 @@ def colors_from_views(pg: PartitionedGraph, views) -> np.ndarray:
     return pg.gather_global_colors(views[:, : pg.n_local_max])
 
 
-def check_coloring(g: Graph, colors: np.ndarray) -> dict:
-    """Validity + quality stats of a global coloring."""
+def _d2_conflicting_pairs(g: Graph, colors: np.ndarray,
+                          marked: np.ndarray) -> int:
+    """Distinct marked vertex pairs with a common neighbour + equal color.
+
+    Distance-2 properness == for every vertex w, the (marked, colored)
+    neighbours of w carry pairwise-distinct colors; duplicates are found by
+    sorting each CSR row's neighbour colors (one global lexsort).  The count
+    dedups witness pairs, so it is exact for "zero conflicts" and a witness
+    count (adjacent duplicates per row) otherwise.
+    """
     src = np.repeat(np.arange(g.n), g.degrees)
-    bad = colors[src] == colors[g.indices]
-    n_colors = int(colors.max(initial=0))
-    counts = np.bincount(colors, minlength=n_colors + 1)[1:]
-    return dict(
-        valid=bool((colors > 0).all()) and not bad.any(),
+    nbr = g.indices
+    ok = marked[nbr] & (colors[nbr] > 0)
+    w, c, v = src[ok], colors[nbr[ok]], nbr[ok]
+    order = np.lexsort((v, c, w))
+    w, c, v = w[order], c[order], v[order]
+    dup = (w[1:] == w[:-1]) & (c[1:] == c[:-1])
+    if not dup.any():
+        return 0
+    a = np.minimum(v[1:][dup], v[:-1][dup]).astype(np.int64)
+    b = np.maximum(v[1:][dup], v[:-1][dup]).astype(np.int64)
+    return int(np.unique(a * g.n + b).shape[0])
+
+
+def check_coloring(g: Graph, colors: np.ndarray, *, distance: int = 1,
+                   marked: np.ndarray | None = None) -> dict:
+    """Validity + quality stats of a global coloring.
+
+    ``distance=2`` additionally requires any two (marked) vertices with a
+    common neighbour to differ in color.  ``marked`` restricts the checked
+    vertex set (partial coloring): unmarked vertices may stay uncolored and
+    never count as conflicts.  Sentinel colors (``<= 0``, e.g. a leaked
+    ``-1``) must never crash the checker — they are reported as uncolored
+    vertices with ``valid=False``.
+    """
+    assert distance in (1, 2)
+    colors = np.asarray(colors)
+    if marked is None:
+        marked = np.ones(g.n, dtype=bool)
+    else:
+        marked = np.asarray(marked, dtype=bool)
+    src = np.repeat(np.arange(g.n), g.degrees)
+    both = marked[src] & marked[g.indices]
+    bad = both & (colors[src] > 0) & (colors[src] == colors[g.indices])
+    n_uncolored = int((marked & (colors <= 0)).sum())
+    cm = colors[marked]
+    cm = cm[cm > 0]
+    n_colors = int(cm.max(initial=0))
+    counts = np.bincount(cm, minlength=n_colors + 1)[1:]
+    out = dict(
+        valid=n_uncolored == 0 and not bad.any(),
         n_conflicting_edges=int(bad.sum()) // 2,
+        n_uncolored=n_uncolored,
         n_colors=n_colors,
         class_sizes=counts,
         class_balance=float(counts.std() / max(counts.mean(), 1e-9))
         if n_colors else 0.0,
     )
+    if distance == 2:
+        n_d2 = _d2_conflicting_pairs(g, colors, marked)
+        out["n_d2_conflicting_pairs"] = n_d2
+        out["valid"] = out["valid"] and n_d2 == 0
+    return out
 
 
-def assert_valid(g: Graph, colors: np.ndarray, what: str = "coloring"):
-    st = check_coloring(g, colors)
+def assert_valid(g: Graph, colors: np.ndarray, what: str = "coloring", *,
+                 distance: int = 1, marked: np.ndarray | None = None):
+    st = check_coloring(g, colors, distance=distance, marked=marked)
     assert st["valid"], (
         f"invalid {what}: {st['n_conflicting_edges']} conflicting edges, "
-        f"min color {colors.min(initial=0)}")
+        f"{st.get('n_d2_conflicting_pairs', 0)} d2 pairs, "
+        f"{st['n_uncolored']} uncolored, min color {colors.min(initial=0)}")
     return st

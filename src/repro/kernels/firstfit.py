@@ -54,9 +54,16 @@ def _forbidden_words(nbr_ref, n_words: int) -> jnp.ndarray:
 
 
 def _find_first_zero(words: jnp.ndarray) -> jnp.ndarray:
-    """(TILE_V, W) bitset -> (TILE_V,) lowest zero bit (32W-1 if full)."""
+    """(TILE_V, W) bitset -> (TILE_V,) lowest zero bit below the sentinel.
+
+    Bit ``32W-1`` is reserved as a saturation sentinel (never reported free),
+    so a result of ``32W-1`` unambiguously means "no permissible color" —
+    mirrors ``core.selection.find_first_zero``.
+    """
     tile_v, n_words = words.shape
-    free = ~words
+    top = jnp.where(jnp.arange(n_words, dtype=jnp.int32)[None, :]
+                    == n_words - 1, ~jnp.uint32(0x7FFFFFFF), jnp.uint32(0))
+    free = ~(words | top)
     has = free != jnp.uint32(0)
     iota = jnp.broadcast_to(jnp.arange(n_words, dtype=jnp.int32)[None, :],
                             (tile_v, n_words))
@@ -130,12 +137,35 @@ def _select_kernel(nbr_ref, active_ref, rand_ref, off_ref, out_ref, *,
     out_ref[...] = jnp.where(active_ref[...] != 0, color, 0).astype(jnp.int32)
 
 
+def _select_kernel_d2(nbr_ref, nbr2_ref, active_ref, rand_ref, off_ref,
+                      out_ref, *, n_words: int, x: int, staggered: bool):
+    """Distance-2 selection: OR the 1-hop and 2-hop forbidden bitsets."""
+    words = (_forbidden_words(nbr_ref[...], n_words)
+             | _forbidden_words(nbr2_ref[...], n_words))
+    color = select_from_words(words, rand_ref[...], off_ref[...], x=x,
+                              staggered=staggered)
+    out_ref[...] = jnp.where(active_ref[...] != 0, color, 0).astype(jnp.int32)
+
+
+def _lose_against(myc, myp, nbrc, nbrp):
+    same = (nbrc == myc) & (myc > 0)
+    return (same & (nbrp > myp)).any(axis=1)
+
+
 def _conflict_kernel(myc_ref, myp_ref, nbrc_ref, nbrp_ref, active_ref,
                      out_ref):
+    lose = _lose_against(myc_ref[...][:, None], myp_ref[...][:, None],
+                         nbrc_ref[...], nbrp_ref[...])
+    out_ref[...] = (lose & (active_ref[...] != 0)).astype(jnp.int32)
+
+
+def _conflict_kernel_d2(myc_ref, myp_ref, nbrc_ref, nbrp_ref, nbr2c_ref,
+                        nbr2p_ref, active_ref, out_ref):
+    """Distance-2 conflicts: lose against any 1-hop OR 2-hop neighbour."""
     myc = myc_ref[...][:, None]
     myp = myp_ref[...][:, None]
-    same = (nbrc_ref[...] == myc) & (myc > 0)
-    lose = (same & (nbrp_ref[...] > myp)).any(axis=1)
+    lose = (_lose_against(myc, myp, nbrc_ref[...], nbrp_ref[...])
+            | _lose_against(myc, myp, nbr2c_ref[...], nbr2p_ref[...]))
     out_ref[...] = (lose & (active_ref[...] != 0)).astype(jnp.int32)
 
 
@@ -172,6 +202,41 @@ def color_select_pallas(nbr_colors, active, rand_u32, offset=None, *,
       offset.astype(jnp.int32))
 
 
+def color_select_pallas_d2(nbr_colors, nbr2_colors, active, rand_u32,
+                          offset=None, *, max_colors: int, x: int = 0,
+                          staggered: bool = False, interpret: bool = False):
+    """Distance-2 tile-parallel selection. V must be a multiple of TILE_V.
+
+    Same contract as ``color_select_pallas`` with a second padded neighbour
+    tile ``nbr2_colors`` (V, MAXD2) — the strict two-hop colors; the kernel
+    ORs both forbidden bitsets before the find-first-zero.
+    """
+    assert max_colors % 32 == 0
+    v, maxd = nbr_colors.shape
+    _, maxd2 = nbr2_colors.shape
+    assert v % TILE_V == 0, f"V={v} not a multiple of {TILE_V}"
+    if offset is None:
+        offset = jnp.zeros((v,), jnp.int32)
+    n_words = max_colors // 32
+    grid = (v // TILE_V,)
+    kernel = functools.partial(_select_kernel_d2, n_words=n_words, x=x,
+                               staggered=staggered)
+    vec = pl.BlockSpec((TILE_V,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_V, maxd), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_V, maxd2), lambda i: (i, 0)),
+            vec, vec, vec,
+        ],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((v,), jnp.int32),
+        interpret=interpret,
+    )(nbr_colors, nbr2_colors, active.astype(jnp.int32), rand_u32,
+      offset.astype(jnp.int32))
+
+
 def conflict_pallas(my_color, my_prio, nbr_colors, nbr_prio, active, *,
                     interpret: bool = False):
     """Tile-parallel conflict detection. Returns (V,) int32 (1 = recolor)."""
@@ -188,3 +253,24 @@ def conflict_pallas(my_color, my_prio, nbr_colors, nbr_prio, active, *,
         out_shape=jax.ShapeDtypeStruct((v,), jnp.int32),
         interpret=interpret,
     )(my_color, my_prio, nbr_colors, nbr_prio, active.astype(jnp.int32))
+
+
+def conflict_pallas_d2(my_color, my_prio, nbr_colors, nbr_prio, nbr2_colors,
+                       nbr2_prio, active, *, interpret: bool = False):
+    """Distance-2 conflict detection over both neighbour tiles."""
+    v, maxd = nbr_colors.shape
+    _, maxd2 = nbr2_colors.shape
+    assert v % TILE_V == 0, f"V={v} not a multiple of {TILE_V}"
+    grid = (v // TILE_V,)
+    vec = pl.BlockSpec((TILE_V,), lambda i: (i,))
+    mat = pl.BlockSpec((TILE_V, maxd), lambda i: (i, 0))
+    mat2 = pl.BlockSpec((TILE_V, maxd2), lambda i: (i, 0))
+    return pl.pallas_call(
+        _conflict_kernel_d2,
+        grid=grid,
+        in_specs=[vec, vec, mat, mat, mat2, mat2, vec],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((v,), jnp.int32),
+        interpret=interpret,
+    )(my_color, my_prio, nbr_colors, nbr_prio, nbr2_colors, nbr2_prio,
+      active.astype(jnp.int32))

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from .firstfit import (TILE_V, _forbidden_words, color_select_pallas,
-                       conflict_pallas, select_from_words)
+                       color_select_pallas_d2, conflict_pallas,
+                       conflict_pallas_d2, select_from_words)
 
 # Strategy names, mirroring repro.core.selection (string-equal; duplicated
 # here so kernels never import core and the layering stays one-way).
@@ -103,6 +104,53 @@ def select_colors(nbr_colors, active, rand_u32=None, *, max_colors: int,
     return out[:v]
 
 
+def select_colors_d2(nbr_colors, nbr2_colors, active, rand_u32=None, *,
+                     max_colors: int, selection: str = FIRST_FIT, x: int = 10,
+                     offset=None, backend: str = "auto",
+                     interpret: bool | None = None):
+    """Distance-2 color selection over two padded neighbour tiles.
+
+    Same contract as ``select_colors`` plus ``nbr2_colors`` (V, MAXD2) int32 —
+    the strict two-hop neighbour colors. Both backends OR the one-hop and
+    two-hop forbidden bitsets before selecting, so a chosen color differs
+    from every color within graph distance 2.
+    """
+    if selection not in SELECTIONS:
+        raise ValueError(
+            f"unknown selection {selection!r}, want one of {SELECTIONS}")
+    assert max_colors % 32 == 0
+    backend = resolve_backend(backend)
+    nbr_colors = jnp.asarray(nbr_colors)
+    nbr2_colors = jnp.asarray(nbr2_colors)
+    v = nbr_colors.shape[0]
+    staggered = selection == STAGGERED
+    x_eff = x if selection == RANDOM_X else 0
+    if rand_u32 is None:
+        rand_u32 = jnp.zeros((v,), jnp.uint32)
+    if offset is None:
+        offset = jnp.zeros((v,), jnp.int32)
+    else:
+        offset = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (v,))
+    active = jnp.asarray(active)
+
+    if backend == "xla":
+        words = (_forbidden_words(nbr_colors, max_colors // 32)
+                 | _forbidden_words(nbr2_colors, max_colors // 32))
+        color = select_from_words(words, rand_u32, offset, x=x_eff,
+                                  staggered=staggered)
+        return jnp.where(active != 0, color, 0).astype(jnp.int32)
+
+    if interpret is None:
+        interpret = _default_interpret()
+    v_pad = -(-v // TILE_V) * TILE_V
+    out = color_select_pallas_d2(
+        _pad_v(nbr_colors, v_pad), _pad_v(nbr2_colors, v_pad),
+        _pad_v(active, v_pad), _pad_v(rand_u32, v_pad), _pad_v(offset, v_pad),
+        max_colors=max_colors, x=x_eff, staggered=staggered,
+        interpret=interpret)
+    return out[:v]
+
+
 def detect_conflicts(my_color, my_prio, nbr_colors, nbr_prio, active, *,
                      backend: str = "auto", interpret: bool | None = None):
     """Tile-parallel conflict detection: row loses iff a neighbour holds the
@@ -123,6 +171,35 @@ def detect_conflicts(my_color, my_prio, nbr_colors, nbr_prio, active, *,
     out = conflict_pallas(
         _pad_v(my_color, v_pad), _pad_v(my_prio, v_pad, fill=-1),
         _pad_v(nbr_colors, v_pad), _pad_v(nbr_prio, v_pad, fill=-1),
+        _pad_v(active, v_pad), interpret=interpret)
+    return out[:v].astype(bool)
+
+
+def detect_conflicts_d2(my_color, my_prio, nbr_colors, nbr_prio, nbr2_colors,
+                        nbr2_prio, active, *, backend: str = "auto",
+                        interpret: bool | None = None):
+    """Distance-2 conflict detection: row loses iff any neighbour at graph
+    distance <= 2 holds the same (nonzero) color with strictly higher
+    priority. Returns (V,) bool; same backend contract as ``select_colors``.
+    """
+    backend = resolve_backend(backend)
+    my_color = jnp.asarray(my_color)
+    active = jnp.asarray(active)
+    if backend == "xla":
+        myc, myp = my_color[:, None], jnp.asarray(my_prio)[:, None]
+        lose = (((nbr_colors == myc) & (myc > 0) & (nbr_prio > myp))
+                .any(axis=1)
+                | ((nbr2_colors == myc) & (myc > 0) & (nbr2_prio > myp))
+                .any(axis=1))
+        return lose & (active != 0)
+    if interpret is None:
+        interpret = _default_interpret()
+    v = my_color.shape[0]
+    v_pad = -(-v // TILE_V) * TILE_V
+    out = conflict_pallas_d2(
+        _pad_v(my_color, v_pad), _pad_v(my_prio, v_pad, fill=-1),
+        _pad_v(nbr_colors, v_pad), _pad_v(nbr_prio, v_pad, fill=-1),
+        _pad_v(nbr2_colors, v_pad), _pad_v(nbr2_prio, v_pad, fill=-1),
         _pad_v(active, v_pad), interpret=interpret)
     return out[:v].astype(bool)
 

@@ -161,7 +161,7 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
                 arrs, view, key)
         compiled_rc = lowered_rc.compile()
         analysis_rc = analyze_hlo(compiled_rc.as_text())
-        # beyond-paper: int16 wire payloads (DESIGN.md §5)
+        # beyond-paper: int16 wire payloads (DESIGN.md §6)
         rfn16 = partial(recolor_spmd, perm_kind="nd",
                         cfg=RecolorConfig(max_colors=256, wire16=True,
                                           scheme="allgather"), P_size=P)

@@ -1,6 +1,15 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device by
 design (the 512-device mesh is exercised only via repro.launch.dryrun and the
-subprocess-based tests below)."""
+subprocess-based tests below).
+
+The suite runs under a ``scheme={sparse,allgather}`` CI matrix: setting
+``REPRO_SCHEME`` flips the *default* boundary-exchange scheme of every config
+(see ``repro.core.comm.DEFAULT_SCHEME``), so each push exercises both
+exchange paths end-to-end.  Colorings are bitwise-identical across schemes,
+which is exactly why all golden pins must hold under either value.
+"""
+import os
+
 import numpy as np
 import pytest
 
@@ -10,5 +19,20 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="session")
+def exchange_scheme():
+    """The active default boundary-exchange scheme (env-driven CI matrix)."""
+    from repro.core import comm
+    return comm.DEFAULT_SCHEME
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    scheme = os.environ.get("REPRO_SCHEME")
+    if scheme is not None and scheme not in ("sparse", "allgather"):
+        raise pytest.UsageError(
+            f"REPRO_SCHEME={scheme!r} invalid, want sparse|allgather")
+
+
+def pytest_report_header(config):
+    return f"repro exchange scheme: {os.environ.get('REPRO_SCHEME', 'sparse')}"

@@ -45,6 +45,26 @@ class TestGenerators:
             g = fn()
             assert g.n > 0 and g.m > 0
 
+    def test_dedup_survives_scale32_coordinates(self):
+        """Edge dedup at the int64-packing overflow boundary (scale >= 32).
+
+        The former ``u * n + v`` int64 key wraps for n = 2**32 endpoints and
+        decodes to negative vertices; the lexsort dedup must handle ids past
+        2**31 exactly.
+        """
+        u = np.array([2**31, 2**31, 2**31 + 1, 0, 2**32 - 1], np.int64)
+        v = np.array([5, 5, 7, 2**32 - 1, 0], np.int64)
+        uu, vv = rmat._dedup_edges(u, v)
+        assert list(zip(uu.tolist(), vv.tolist())) == [
+            (0, 2**32 - 1), (2**31, 5), (2**31 + 1, 7), (2**32 - 1, 0)]
+        # and stays identical to np.unique-packed keys in the safe range
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 1000, 500)
+        b = rng.integers(0, 1000, 500)
+        key = np.unique(a * 1000 + b)
+        uu, vv = rmat._dedup_edges(a, b)
+        np.testing.assert_array_equal(uu * 1000 + vv, key)
+
 
 class TestPartition:
     @pytest.mark.parametrize("P", [1, 2, 3, 7, 8])
@@ -88,6 +108,41 @@ class TestPartition:
                              for e in range(pg.indptr[p, v],
                                             pg.indptr[p, v + 1]))
                 assert pg.is_internal[p, v] == (not remote)
+
+    @pytest.mark.parametrize("P", [2, 3, 4])
+    def test_two_hop_halo_matches_oracle(self, P):
+        """halo=2: nbr2 rows, ghost tables and boundary vs a brute force."""
+        g = rmat.rmat_good(8, 8, seed=1)
+        adj = [set(g.indices[g.indptr[v]:g.indptr[v + 1]].tolist())
+               for v in range(g.n)]
+        d2 = []
+        for v in range(g.n):
+            s = set()
+            for w in adj[v]:
+                s |= adj[w]
+            d2.append(s - adj[v] - {v})
+        pg = partition_graph(g, P, halo=2)
+        for p in range(P):
+            lo, hi = int(pg.offs[p]), int(pg.offs[p + 1])
+            nl = int(pg.n_local[p])
+            for v in range(0, nl, 7):                   # sampled rows
+                row = pg.nbr2[p, v]
+                slots = row[row != pg.sentinel]
+                assert set(pg.gvid[p, slots].tolist()) == d2[lo + v]
+            assert (pg.nbr2[p, nl:] == pg.sentinel).all()
+            # ghost set = all remote vertices within two hops, ascending
+            want = set()
+            for v in range(lo, hi):
+                want |= {u for u in adj[v] | d2[v] if not lo <= u < hi}
+            ng = int(pg.n_ghost[p])
+            got = pg.gvid[p, pg.n_local_max : pg.n_local_max + ng]
+            assert got.tolist() == sorted(want)
+            # boundary = locals read by some other shard (within two hops)
+            bnd = set(pg.boundary[p, : int(pg.n_boundary[p])].tolist())
+            for v in range(nl):
+                read = any(not lo <= u < hi for u in adj[lo + v] | d2[lo + v])
+                assert (v in bnd) == read
+                assert pg.is_internal[p, v] == (not read)
 
     @settings(max_examples=20, deadline=None)
     @given(n=st.integers(6, 40), p=st.floats(0.05, 0.5),

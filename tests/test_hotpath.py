@@ -113,6 +113,30 @@ def test_detect_conflicts_backends_agree():
     np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want))
 
 
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_staggered_saturation_boundary(backend):
+    """In-kernel offset path: color 32W-1 is a true saturation sentinel.
+
+    Rows whose neighbours occupy every legal color must come back as the
+    sentinel ``mc-1``; a row with exactly the last legal color (``mc-2``)
+    free at/above the offset must take it instead of wrapping below.
+    """
+    mc = 64
+    full = np.arange(1, mc - 1, dtype=np.int32)      # colors 1..62
+    rows = np.stack([
+        full,                                        # only reserved 63 left
+        np.where(full == 5, 0, full),                # free = {5, 63}
+        np.where(full == mc - 2, 0, full),           # free = {62, 63}
+    ])
+    got = select_colors(rows, np.ones(3, bool), max_colors=mc,
+                        selection=ops.STAGGERED, offset=np.full(3, 40,
+                                                                np.int32),
+                        backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), [mc - 1, 5, mc - 2])
+    ff = select_colors(rows, np.ones(3, bool), max_colors=mc, backend=backend)
+    np.testing.assert_array_equal(np.asarray(ff), [mc - 1, 5, mc - 2])
+
+
 def test_select_rejects_unknowns():
     nbr = np.zeros((4, 2), np.int32)
     with pytest.raises(ValueError):

@@ -61,6 +61,31 @@ def test_staggered_wraps():
     assert int(sel.staggered(words, jnp.int32(32))) == 1
 
 
+def test_top_bit_is_saturation_sentinel():
+    """Color 32W-1 is reserved: a 32W-1 return always means "saturated".
+
+    Boundary regression for the staggered ambiguity — previously a genuinely
+    free last bit was indistinguishable from a full set, so ``staggered``
+    wrapped below its offset while believing color 32W-1 was legal.
+    """
+    # only the (reserved) top bit free -> still reports saturation
+    words = jnp.asarray(np.array([0xFFFFFFFF, 0x7FFFFFFF], np.uint32))
+    assert int(sel.find_first_zero(words)) == 63
+    assert int(sel.first_fit(words)) == 63
+    # free = {5, 63}, offset 40: the reserved 63 is not legal, so staggered
+    # wraps to 5 — and never hands out 63 while free colors remain
+    words = jnp.asarray(np.array([0xFFFFFFFF ^ (1 << 5), 0x7FFFFFFF],
+                                 np.uint32))
+    assert int(sel.staggered(words, jnp.int32(40))) == 5
+    # the last *legal* color (62) free at/above the offset: no wrap below
+    words = jnp.asarray(np.array([0xFFFFFFFF ^ (1 << 5),
+                                  0xFFFFFFFF ^ (1 << 30)], np.uint32))
+    assert int(sel.staggered(words, jnp.int32(40))) == 62
+    # fully saturated set: unambiguous sentinel
+    words = jnp.asarray(np.array([0xFFFFFFFF, 0xFFFFFFFF], np.uint32))
+    assert int(sel.find_first_zero(words)) == 63
+
+
 def test_least_used_prefers_open_colors():
     usage = jnp.asarray(np.array([0, 5, 2, 0, 7] + [0] * 59, np.int32))
     words = jnp.zeros((2,), jnp.uint32).at[0].set(jnp.uint32(0b1))  # only c0 forbidden
