@@ -44,7 +44,7 @@ def _recolor_spmd_legacy(arrs, view, key, perm_kind, cfg: RecolorConfig):
     n_slots = arrs["prio"].shape[0]
     mc = cfg.max_colors
 
-    sizes = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
+    sizes, _ = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
     n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
     rank = permutation_rank(sizes, perm_kind, key)
     step_of = rank[view].at[n_slots - 1].set(0)

@@ -6,6 +6,8 @@ Public API:
   ColorConfig, color_graph_sim/_sharded          — speculative coloring
   RecolorConfig, recolor_sim/_sharded, arc_sim   — iterative recoloring
   recolor_iterations, schedule_for_iteration     — ND-RAND%x schedules
+  PipelineConfig, pipeline_sim/_sharded          — fused device-resident
+                                                   color→recolor pipeline
   message_stats                                  — piggybacking accounting
   presets.speed / presets.quality                — the paper's parameter sets
   select_colors                                  — shared bitset color-selection
@@ -19,6 +21,8 @@ from .graph import (CommPlan, Graph, PartitionedGraph, build_comm_plan,
                     partition_graph)
 from .ordering import compute_order
 from .piggyback import MessageStats, message_stats
+from .pipeline import (PipelineConfig, color_then_recolor, pipeline_sharded,
+                       pipeline_sim, recolor_loop_sim)
 from .recolor import (ND, NI, RAND, RV, RecolorConfig, arc_sim,
                       recolor_iterations, recolor_sharded, recolor_sim,
                       schedule_for_iteration)
@@ -28,12 +32,13 @@ from .validate import assert_valid, check_coloring, colors_from_views
 
 __all__ = [
     "AXIS", "AxisComm", "ColorConfig", "CommConfig", "CommPlan", "Graph",
-    "MessageStats", "ND", "NI", "PartitionedGraph", "RAND", "RV",
-    "RecolorConfig", "SCHEMES", "arc_sim", "assert_valid",
+    "MessageStats", "ND", "NI", "PartitionedGraph", "PipelineConfig",
+    "RAND", "RV", "RecolorConfig", "SCHEMES", "arc_sim", "assert_valid",
     "build_comm_plan", "check_coloring", "color_graph_sharded",
-    "color_graph_sim", "color_spmd", "colors_from_views", "compute_order",
-    "message_stats", "ordering", "partition_graph", "presets",
-    "recolor_iterations", "recolor_sharded", "recolor_sim", "rmat",
-    "schedule_for_iteration", "select_colors", "select_colors_d2",
-    "selection", "stats_to_host",
+    "color_graph_sim", "color_spmd", "color_then_recolor",
+    "colors_from_views", "compute_order", "message_stats", "ordering",
+    "partition_graph", "pipeline_sharded", "pipeline_sim", "presets",
+    "recolor_iterations", "recolor_loop_sim", "recolor_sharded",
+    "recolor_sim", "rmat", "schedule_for_iteration", "select_colors",
+    "select_colors_d2", "selection", "stats_to_host",
 ]

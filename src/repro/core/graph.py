@@ -77,7 +77,10 @@ class Graph:
         return bool((colors[src] != colors[self.indices]).all())
 
     def num_colors(self, colors: np.ndarray) -> int:
-        return int(colors.max(initial=0))
+        """Distinct positive colors in use (not the max id — recoloring can
+        empty classes below the maximum, leaving gaps in the id range)."""
+        c = np.unique(np.asarray(colors))
+        return int((c > 0).sum())
 
 
 def _pad2(rows: list[np.ndarray], width: int, fill: int) -> np.ndarray:

@@ -1,0 +1,274 @@
+"""Fused device-resident coloring → iterative-recoloring pipeline.
+
+The paper's central result is a *loop*: a cheap speculative initial coloring
+followed by multiple recoloring iterations dominates the time-quality Pareto
+front.  The host-looped form (``recolor_iterations`` dispatching one
+``recolor_sim`` per iteration) pays a host-device round-trip per iteration —
+the color view and every stat sync through the host, and each permutation
+kind traces its own program.  ``color_then_recolor`` keeps the whole
+experiment resident on device, the "communicate only what changed"
+discipline of the distributed-GPU coloring literature (Bogle & Slota 2021;
+Rokos et al. 2015) applied to the iteration loop itself:
+
+- the initial speculative coloring (any selection/ordering, distance 1|2,
+  ``partial``/``marked``) and K recoloring iterations run inside **one
+  jitted program** — the comm plan, ELL arrays and exchange closures are
+  bound once;
+- the per-iteration permutation schedule (ND-RAND%x / ND-RAND%2^i, see
+  ``schedule_for_iteration``) is resolved as **traced branches**
+  (``permutation_rank_traced``): the kind id array is static per config, so
+  no re-tracing per kind and the loop is a single ``lax.while_loop``;
+- the RNG key is **folded per iteration** (``fold_in(key, it)``) — bitwise
+  the same stream as the host loop, and two iterations never share a RAND
+  permutation;
+- **adaptive stopping**: the loop quits early once the global *distinct*
+  color count has failed to improve for ``patience`` consecutive iterations
+  (the paper's time-quality knob; ``patience=0`` always runs all K);
+- per-iteration stats land in a device-resident ``(K, len(HISTORY_STATS))``
+  int32 history (colors, distinct colors, exchanges, supersteps, wire bytes,
+  out-of-range count, permutation id, ran flag), unpacked **once** at the
+  end — the only host sync of the whole run.
+
+``recolor_iterations`` is a thin wrapper over the recolor-only loop
+(``recolor_loop_sim``); the host loop survives behind ``fused=False`` as the
+bitwise reference (tests/test_pipeline.py pins fused == host at P ∈
+{2, 4, 16}, both exchange schemes, distance 1 and 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .comm import SPARSE, AxisComm, run_sharded, run_sim, stats_to_host
+from .graph import PartitionedGraph
+from .recolor import (ALL_PERMS, ND, PERM_IDS, RecolorConfig, class_sizes,
+                      permutation_rank_traced, recolor_pass_spmd,
+                      schedule_for_iteration)
+from .speculative import ColorConfig, _apply_partial, color_spmd
+
+# Column layout of the device-resident per-iteration history.  ``ran`` marks
+# rows the adaptive stop never reached (they stay zero).
+HISTORY_STATS = ("n_colors", "n_colors_distinct", "n_colors_before",
+                 "n_exchanges", "n_steps", "wire_bytes", "n_out_of_range",
+                 "perm_id", "ran")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Static configuration of the fused color→recolor pipeline."""
+
+    color: ColorConfig | None = None  # None = recolor-only (seed view given)
+    recolor: RecolorConfig = RecolorConfig()
+    n_iters: int = 8               # K — max recoloring iterations
+    base_perm: str = ND            # schedule base (paper's best: ND)
+    rand_every: int = 0            # ND-RAND%x: RAND every x-th iteration
+    rand_pow2: bool = False        # ND-RAND%2^i: RAND at power-of-two its
+    patience: int = 0              # adaptive stop: quit after this many
+                                   # non-improving iterations (0 = run all K)
+    seed: int = 0                  # recoloring key seed (folded per it)
+
+    def __post_init__(self):
+        assert self.n_iters >= 0
+        assert self.patience >= 0
+        assert self.base_perm in ALL_PERMS, f"bad perm {self.base_perm!r}"
+        if self.color is not None:
+            assert self.color.distance == self.recolor.distance, (
+                "one device layout serves both stages: color and recolor "
+                "must agree on distance")
+
+    @property
+    def kind_ids(self) -> tuple:
+        """Static per-iteration permutation ids (the ND-RAND%x schedule)."""
+        return tuple(
+            PERM_IDS[schedule_for_iteration(it, self.base_perm,
+                                            self.rand_every, self.rand_pow2)]
+            for it in range(1, self.n_iters + 1))
+
+    @property
+    def needs_sparse_plan(self) -> bool:
+        return (self.recolor.scheme == SPARSE
+                or (self.color is not None and self.color.scheme == SPARSE))
+
+
+def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
+                      P_size: int | None = None, plan_static=None):
+    """K fused recoloring iterations in one ``lax.while_loop`` (per-shard).
+
+    Each iteration folds ``it`` into ``key``, reads its permutation kind
+    from the static schedule, and runs ``recolor_pass_spmd`` — bitwise the
+    host loop's iteration, minus the host round-trip.  Returns
+    ``(view, history (K, n_stats) int32, n_iters_run)``.
+    """
+    rcfg = cfg.recolor
+    comm = AxisComm()
+    n_local_max = arrs["indptr"].shape[0] - 1
+    mc = rcfg.max_colors
+    K = cfg.n_iters
+    hist0 = jnp.zeros((max(K, 1), len(HISTORY_STATS)), jnp.int32)
+    if K == 0:
+        return view, hist0, jnp.int32(0)
+    kind_ids = jnp.asarray(np.asarray(cfg.kind_ids, np.int32))
+    patience = cfg.patience if cfg.patience else K + 1  # K+1 never trips
+
+    def body(state):
+        view, it, best, stall, hist, sizes, n_oor = state
+        ikey = jax.random.fold_in(key, it)           # host loop's per-it key
+        kid = kind_ids[it - 1]
+        n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
+        rank = permutation_rank_traced(sizes, kid, ikey)
+        view, st = recolor_pass_spmd(arrs, view, rank, n_classes, rcfg,
+                                     P_size=P_size, plan_static=plan_static)
+        # post-iteration sizes double as the next iteration's schedule input
+        # (local slots are final once the iteration ends, so this is bitwise
+        # the class_sizes the host loop recomputes at its next call)
+        sizes, oor_next = class_sizes(view, arrs["n_local"], n_local_max, mc,
+                                      comm)
+        nd_after = jnp.sum(sizes > 0).astype(jnp.int32)
+        row = jnp.stack([st["n_colors"], nd_after, n_classes,
+                         st["n_exchanges"], st["n_steps"], st["wire_bytes"],
+                         n_oor, kid, jnp.int32(1)]).astype(jnp.int32)
+        hist = jax.lax.dynamic_update_slice(hist, row[None],
+                                            (it - 1, jnp.int32(0)))
+        improved = nd_after < best
+        return (view, it + 1, jnp.minimum(best, nd_after),
+                jnp.where(improved, jnp.int32(0), stall + 1), hist, sizes,
+                oor_next)
+
+    def cond(state):
+        _, it, _, stall, _, _, _ = state
+        return (it <= K) & (stall < patience)
+
+    sizes0, oor0 = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
+    state0 = (view, jnp.int32(1), jnp.int32(jnp.iinfo(jnp.int32).max),
+              jnp.int32(0), hist0, sizes0, oor0)
+    view, it, _, _, hist, _, _ = jax.lax.while_loop(cond, body, state0)
+    return view, hist, it - 1
+
+
+def color_then_recolor(arrs, order, color_key, recolor_key,
+                       cfg: PipelineConfig, P_size: int | None = None,
+                       plan_static=None):
+    """The fused pipeline program (per-shard SPMD, jit/shard_map ready).
+
+    Initial speculative coloring + K recoloring iterations, all device
+    resident.  Returns ``(view, color_stats, history, n_iters_run)``.
+    """
+    assert cfg.color is not None, "color_then_recolor needs cfg.color"
+    view, cstats = color_spmd(arrs, order, color_key, cfg.color,
+                              P_size=P_size, plan_static=plan_static)
+    view, hist, n_run = recolor_loop_spmd(arrs, view, recolor_key, cfg,
+                                          P_size=P_size,
+                                          plan_static=plan_static)
+    return view, cstats, hist, n_run
+
+
+# ----------------------------------------------------------------- drivers --
+
+def _history_to_host(hist) -> list[dict]:
+    """(K, n_stats) (or (P, K, n_stats) stacked) device history -> dicts.
+
+    One unpacking at the end of the run — the host loop's per-iteration
+    ``stats_to_host`` sync collapsed into a single transfer.  Rows the
+    adaptive stop never reached (``ran == 0``) are dropped.
+    """
+    hist = np.asarray(hist)
+    if hist.ndim == 3:                       # (P, K, n_stats) shard stack
+        hist = hist.max(axis=0)
+    out = []
+    for i in range(hist.shape[0]):
+        row = {k: int(v) for k, v in zip(HISTORY_STATS, hist[i])}
+        if not row.pop("ran"):
+            break
+        row["perm"] = ALL_PERMS[row.pop("perm_id")]
+        row["iteration"] = i + 1
+        out.append(row)
+    return out
+
+
+def _plan_static(pg: PartitionedGraph, cfg: PipelineConfig):
+    return pg.comm_plan.static if cfg.needs_sparse_plan else None
+
+
+def _pipeline_arrays(pg: PartitionedGraph, cfg: PipelineConfig) -> dict:
+    return {k: jnp.asarray(v)
+            for k, v in pg.arrays(sparse=cfg.needs_sparse_plan).items()}
+
+
+@lru_cache(maxsize=64)
+def _loop_sim_fn(P, cfg, plan_static):
+    fn = partial(recolor_loop_spmd, cfg=cfg, P_size=P,
+                 plan_static=plan_static)
+    return jax.jit(
+        lambda arrs, view, key: run_sim(fn, P, (arrs, view), (key,)))
+
+
+def recolor_loop_sim(pg: PartitionedGraph, view, cfg: PipelineConfig,
+                     key=None):
+    """Fused recolor-only loop (sim executor): ``recolor_iterations``' core.
+
+    Returns ``(view, history list-of-dicts, n_iters_run)``.
+    """
+    arrs = _pipeline_arrays(pg, cfg)
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    view, hist, n_run = _loop_sim_fn(pg.P, cfg, _plan_static(pg, cfg))(
+        arrs, jnp.asarray(view), key)
+    return view, _history_to_host(hist), int(np.max(np.asarray(n_run)))
+
+
+@lru_cache(maxsize=64)
+def _pipe_sim_fn(P, cfg, plan_static):
+    fn = partial(color_then_recolor, cfg=cfg, P_size=P,
+                 plan_static=plan_static)
+    return jax.jit(lambda arrs, order, ck, rk: run_sim(
+        fn, P, (arrs, order), (ck, rk)))
+
+
+def _keys(cfg: PipelineConfig, color_key, recolor_key):
+    if color_key is None:
+        color_key = jax.random.key(cfg.color.seed)
+    if recolor_key is None:
+        recolor_key = jax.random.key(cfg.seed)
+    return color_key, recolor_key
+
+
+def _pipeline_result(view, cstats, hist, n_run):
+    return view, dict(color=stats_to_host(cstats),
+                      history=_history_to_host(hist),
+                      n_iters_run=int(np.max(np.asarray(n_run))))
+
+
+def pipeline_sim(pg: PartitionedGraph, order, cfg: PipelineConfig, *,
+                 marked=None, color_key=None, recolor_key=None):
+    """Run the fused pipeline *simulated* on one device (P vmap lanes).
+
+    Returns ``(view, result)`` where ``result`` holds the initial-coloring
+    stats (``"color"``), the per-iteration ``"history"`` (same dicts as
+    ``recolor_iterations``) and ``"n_iters_run"`` (adaptive stop included).
+    """
+    assert cfg.color is not None, "pipeline_sim needs cfg.color"
+    arrs = _pipeline_arrays(pg, cfg)
+    order = _apply_partial(order, cfg.color, marked)
+    ck, rk = _keys(cfg, color_key, recolor_key)
+    out = _pipe_sim_fn(pg.P, cfg, _plan_static(pg, cfg))(
+        arrs, jnp.asarray(order), ck, rk)
+    return _pipeline_result(*out)
+
+
+def pipeline_sharded(pg: PartitionedGraph, order, cfg: PipelineConfig, mesh,
+                     *, marked=None, color_key=None, recolor_key=None):
+    """Run the fused pipeline on a real mesh axis ``workers`` (shard_map)."""
+    assert cfg.color is not None, "pipeline_sharded needs cfg.color"
+    arrs = _pipeline_arrays(pg, cfg)
+    order = _apply_partial(order, cfg.color, marked)
+    ck, rk = _keys(cfg, color_key, recolor_key)
+    fn = partial(color_then_recolor, cfg=cfg, P_size=pg.P,
+                 plan_static=_plan_static(pg, cfg))
+    out = jax.jit(
+        lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2)))(
+            arrs, jnp.asarray(order), ck, rk)
+    return _pipeline_result(*out)

@@ -35,6 +35,12 @@ still needs.
 Asynchronous recoloring (aRC, §3): each shard *locally* orders vertices by
 color class and reruns the speculative framework (conflicts possible).
 
+Multi-iteration runs live in ``pipeline.py`` (DESIGN.md §7): the fused
+``color_then_recolor`` keeps seed coloring + K iterations device-resident in
+one ``lax.while_loop``; ``recolor_iterations`` below is a thin wrapper over
+its recolor-only loop, with the host loop kept behind ``fused=False`` as the
+bitwise reference.
+
 Distance-2 mode (``RecolorConfig(distance=2)``, DESIGN.md §5): a class of a
 valid D2 coloring is a distance-2 independent set, so the step stays
 conflict-free; selection ORs the two-hop bitset and the piggyback schedule
@@ -46,6 +52,7 @@ which every permutation ranks 0 and the step loop skips unconditionally.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from functools import lru_cache, partial
 
 import jax
@@ -65,6 +72,18 @@ NI = "ni"
 ND = "nd"
 RAND = "rand"
 ALL_PERMS = (RV, NI, ND, RAND)
+# Integer ids for the fused pipeline's traced permutation schedule
+# (``pipeline.py`` resolves the per-iteration kind with ``lax.switch``).
+PERM_IDS = {kind: i for i, kind in enumerate(ALL_PERMS)}
+
+# Driver-level call counter: manual back-to-back ``recolor_sim`` calls that
+# fall back to the config seed must not replay the identical RAND permutation
+# (ISSUE 4).  Callers that need reproducible keys pass ``key=`` explicitly.
+_DEFAULT_KEY_CALLS = itertools.count()
+
+
+def _default_key(seed: int):
+    return jax.random.fold_in(jax.random.key(seed), next(_DEFAULT_KEY_CALLS))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,13 +119,23 @@ class RecolorConfig:
 
 
 def class_sizes(view, n_local, n_local_max, max_colors, comm: AxisComm):
-    """Global color-class sizes (max_colors,) — the NI/ND pre-communication."""
+    """Global color-class sizes (max_colors,) — the NI/ND pre-communication.
+
+    Returns ``(sizes, n_out_of_range)``.  Colors outside ``[0, max_colors)``
+    are masked out of the scatter-add (JAX's default clip mode would silently
+    inflate the ``max_colors - 1`` class instead) and surfaced in the global
+    ``n_out_of_range`` count so a poisoned view is visible in the stats.
+    """
     valid = jnp.arange(n_local_max) < n_local
-    idx = jnp.where(valid, view[:n_local_max], 0)
+    raw = view[:n_local_max]
+    in_range = (raw >= 0) & (raw < max_colors)
+    oor = comm.psum(jnp.sum(valid & ~in_range, dtype=jnp.int32))
+    counted = valid & in_range
+    idx = jnp.where(counted, raw, 0)
     local = jnp.zeros((max_colors,), jnp.int32).at[idx].add(
-        valid.astype(jnp.int32))
+        counted.astype(jnp.int32))
     local = local.at[0].set(0)
-    return comm.psum(local)
+    return comm.psum(local), oor
 
 
 def permutation_rank(sizes, kind: str, key) -> jnp.ndarray:
@@ -134,6 +163,19 @@ def permutation_rank(sizes, kind: str, key) -> jnp.ndarray:
     rank = jnp.zeros((mc,), jnp.int32).at[order].set(
         jnp.arange(1, mc + 1, dtype=jnp.int32))
     return jnp.where(present, rank, 0).astype(jnp.int32)
+
+
+def permutation_rank_traced(sizes, kind_id, key) -> jnp.ndarray:
+    """``permutation_rank`` with the kind resolved as a traced branch.
+
+    ``kind_id`` indexes ``ALL_PERMS`` (see ``PERM_IDS``); each branch is the
+    static function above, so a branch is bitwise-identical to the same call
+    with a static kind — the fused pipeline's schedule can live in one jitted
+    program without re-tracing per permutation kind.
+    """
+    branches = [lambda s, ky, k=k: permutation_rank(s, k, ky)
+                for k in ALL_PERMS]
+    return jax.lax.switch(kind_id, branches, sizes, key)
 
 
 def _cross_deps(step_of, arrs, n_local_max):
@@ -227,12 +269,13 @@ def _needed_exchange_rounds(step_of, arrs, n_local_max, K, max_colors,
     return needed
 
 
-def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
-                 P_size: int | None = None, plan_static=None):
-    """One synchronous recoloring iteration (per-shard SPMD).
+def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
+                      P_size: int | None = None, plan_static=None):
+    """One synchronous recoloring iteration given a precomputed class rank.
 
-    `view` is a valid coloring (n_slots,) with fresh ghosts. Returns the new
-    view plus stats (colors, executed/possible exchanges, wire bytes).
+    The shared core of ``recolor_spmd`` (static permutation kind) and the
+    fused ``pipeline.color_then_recolor`` loop (kind resolved as a traced
+    branch): everything from the step map through the chunked hot loop.
 
     Hot loop: vertices are sorted by class step; each class is consumed as
     <= ceil(pmax(class size)/chunk) fixed-size chunks.  A chunk gathers its
@@ -263,9 +306,6 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
         raise ValueError("distance=2 needs the two-hop halo: partition with "
                          "partition_graph(g, P, halo=2)")
 
-    sizes = class_sizes(view, n_local, n_local_max, mc, comm)
-    n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
-    rank = permutation_rank(sizes, perm_kind, key)
     step_of = rank[view]                              # (n_slots,) step per slot
     step_of = step_of.at[n_slots - 1].set(0)          # sentinel
 
@@ -350,6 +390,35 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
     return new_view, stats
 
 
+def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
+                 P_size: int | None = None, plan_static=None):
+    """One synchronous recoloring iteration (per-shard SPMD).
+
+    `view` is a valid coloring (n_slots,) with fresh ghosts. Returns the new
+    view plus stats (colors, executed/possible exchanges, wire bytes); the
+    step loop itself lives in ``recolor_pass_spmd``.  The fused pipeline
+    threads the post-iteration ``class_sizes`` into the next iteration
+    instead of recomputing it (bitwise the same array) — here the stand-alone
+    call computes both ends itself.
+    """
+    comm = AxisComm()
+    n_local_max = arrs["indptr"].shape[0] - 1
+    sizes, n_oor = class_sizes(view, arrs["n_local"], n_local_max,
+                               cfg.max_colors, comm)
+    n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
+    rank = permutation_rank(sizes, perm_kind, key)
+    new_view, stats = recolor_pass_spmd(arrs, view, rank, n_classes, cfg,
+                                        P_size=P_size, plan_static=plan_static)
+    sizes_after, _ = class_sizes(new_view, arrs["n_local"], n_local_max,
+                                 cfg.max_colors, comm)
+    # distinct classes actually in use — the paper's quality metric (the max
+    # id in ``n_colors`` can overstate it once recoloring empties classes);
+    # also the fused pipeline's adaptive-stop signal
+    stats["n_colors_distinct"] = jnp.sum(sizes_after > 0).astype(jnp.int32)
+    stats["n_out_of_range"] = n_oor
+    return new_view, stats
+
+
 def arc_order_spmd(view, n_local, n_local_max, rank):
     """aRC visit order: local slots sorted by (class step, slot) — per shard."""
     step_loc = rank[view[:n_local_max]]
@@ -368,11 +437,17 @@ def arc_spmd(arrs, view, key, perm_kind: str, rc_cfg: RecolorConfig,
     comm = AxisComm()
     n_local_max = arrs["indptr"].shape[0] - 1
     mc = rc_cfg.max_colors
-    sizes = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
-    rank = permutation_rank(sizes, perm_kind, key)
+    sizes, n_oor = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
+    # independent streams: the class permutation and the speculative repair
+    # must not consume the same key (identical bits would correlate the RAND
+    # permutation with the tie-break randomness)
+    k_rank, k_repair = jax.random.split(key)
+    rank = permutation_rank(sizes, perm_kind, k_rank)
     order = arc_order_spmd(view, arrs["n_local"], n_local_max, rank)
-    return color_spmd(arrs, order, key, sp_cfg, P_size=P_size,
-                      plan_static=plan_static)
+    new_view, stats = color_spmd(arrs, order, k_repair, sp_cfg, P_size=P_size,
+                                 plan_static=plan_static)
+    stats["n_out_of_range"] = n_oor
+    return new_view, stats
 
 
 # ----------------------------------------------------------------- drivers --
@@ -389,7 +464,7 @@ def recolor_sim(pg: PartitionedGraph, view, perm_kind: str,
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
-        key = jax.random.key(cfg.seed)
+        key = _default_key(cfg.seed)
     new_view, stats = _rc_sim_fn(pg.P, perm_kind, cfg, _plan_static(pg, cfg))(
         arrs, jnp.asarray(view), key)
     return new_view, stats_to_host(stats)
@@ -407,7 +482,7 @@ def arc_sim(pg: PartitionedGraph, view, perm_kind: str, rc_cfg: RecolorConfig,
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=sp_cfg.scheme == SPARSE).items()}
     if key is None:
-        key = jax.random.key(rc_cfg.seed)
+        key = _default_key(rc_cfg.seed)
     new_view, stats = _arc_sim_fn(pg.P, perm_kind, rc_cfg, sp_cfg,
                                   _plan_static(pg, sp_cfg))(
         arrs, jnp.asarray(view), key)
@@ -419,7 +494,7 @@ def recolor_sharded(pg: PartitionedGraph, view, perm_kind: str,
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
-        key = jax.random.key(cfg.seed)
+        key = _default_key(cfg.seed)
     fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg, P_size=pg.P,
                  plan_static=_plan_static(pg, cfg))
     new_view, stats = jax.jit(
@@ -441,8 +516,23 @@ def schedule_for_iteration(it: int, base: str = ND, rand_every: int = 0,
 def recolor_iterations(pg: PartitionedGraph, view, n_iters: int,
                        cfg: RecolorConfig, *, base_perm: str = ND,
                        rand_every: int = 0, rand_pow2: bool = False,
-                       seed: int = 0, collect=None):
-    """Run `n_iters` RC iterations with an ND-RAND%x style schedule (sim)."""
+                       seed: int = 0, collect=None, fused: bool = True):
+    """Run `n_iters` RC iterations with an ND-RAND%x style schedule (sim).
+
+    By default the loop runs *device-resident* through the fused pipeline
+    (``pipeline.recolor_loop_sim``): one jitted program, no per-iteration
+    host round-trip, bitwise-identical views and history to the host loop.
+    ``fused=False`` forces the host loop (one ``recolor_sim`` dispatch per
+    iteration) — kept as the reference the fused path is tested against;
+    ``collect=`` implies it, since per-iteration views must reach the host.
+    """
+    if fused and collect is None and n_iters > 0:
+        from .pipeline import PipelineConfig, recolor_loop_sim
+        pcfg = PipelineConfig(
+            color=None, recolor=cfg, n_iters=n_iters, base_perm=base_perm,
+            rand_every=rand_every, rand_pow2=rand_pow2, seed=seed)
+        view, history, _ = recolor_loop_sim(pg, view, pcfg)
+        return view, history
     history = []
     for it in range(1, n_iters + 1):
         kind = schedule_for_iteration(it, base_perm, rand_every, rand_pow2)

@@ -391,8 +391,17 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
         cond, round_body, state0)
 
     local_max = jnp.max(view[:n_local_max])
+    # distinct classes in use — the corrected quality metric (Staggered FF
+    # spreads shards across the id range, so the max id alone can massively
+    # overstate the color count); `usage` over-counts repaired vertices, so
+    # derive the mask from the final view instead
+    valid = jnp.arange(n_local_max) < arrs["n_local"]
+    in_use = jnp.zeros((cfg.max_colors,), bool).at[
+        jnp.where(valid, view[:n_local_max], 0)].max(valid)
+    in_use = comm.pmax(in_use.at[0].set(False))
     stats = dict(
         n_colors=comm.pmax(local_max),
+        n_colors_distinct=jnp.sum(in_use, dtype=jnp.int32),
         n_rounds=n_rounds,
         n_exchanges=n_ex,
         wire_bytes=n_bytes,

@@ -59,15 +59,22 @@ def check_coloring(g: Graph, colors: np.ndarray, *, distance: int = 1,
     n_uncolored = int((marked & (colors <= 0)).sum())
     cm = colors[marked]
     cm = cm[cm > 0]
-    n_colors = int(cm.max(initial=0))
-    counts = np.bincount(cm, minlength=n_colors + 1)[1:]
+    # Quality metric = number of *distinct* colors in use.  Recoloring (and
+    # staggered selection) can empty classes below the maximum id, so the max
+    # id alone overstates the paper's color count on gappy colorings; the id
+    # bound stays available as ``max_color_id``.
+    max_color_id = int(cm.max(initial=0))
+    n_colors = int(np.unique(cm).size)
+    counts = np.bincount(cm, minlength=max_color_id + 1)[1:]
+    nonempty = counts[counts > 0]
     out = dict(
         valid=n_uncolored == 0 and not bad.any(),
         n_conflicting_edges=int(bad.sum()) // 2,
         n_uncolored=n_uncolored,
         n_colors=n_colors,
+        max_color_id=max_color_id,
         class_sizes=counts,
-        class_balance=float(counts.std() / max(counts.mean(), 1e-9))
+        class_balance=float(nonempty.std() / max(nonempty.mean(), 1e-9))
         if n_colors else 0.0,
     )
     if distance == 2:

@@ -191,6 +191,28 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
         else:
             sparse_rec["lowering"] = (
                 f"skipped: {len(plan.shifts)} ppermute rounds")
+        # fused pipeline (DESIGN.md §7): initial coloring + K recoloring
+        # iterations resident in ONE program — the paper's headline
+        # experiment with zero per-iteration host round-trips
+        from repro.core.pipeline import PipelineConfig, color_then_recolor
+        pcfg = PipelineConfig(
+            color=ColorConfig(max_colors=256, superstep=64,
+                              scheme="allgather"),
+            recolor=RecolorConfig(max_colors=256, scheme="allgather"),
+            n_iters=4, patience=2)
+        pfn = partial(color_then_recolor, cfg=pcfg, P_size=P)
+        t_pipe = time.time()
+        compiled_pipe = jax.jit(
+            lambda a, o, ck, rk: run_sharded(pfn, mesh, (a, o),
+                                             (ck, rk))).lower(
+                arrs, order, key, key).compile()
+        analysis_pipe = analyze_hlo(compiled_pipe.as_text())
+        pipeline_rec = dict(
+            n_iters=pcfg.n_iters, patience=pcfg.patience,
+            compile_s=round(time.time() - t_pipe, 2),
+            coll_count=analysis_pipe["coll_count"],
+            coll_bytes=analysis_pipe["coll_bytes"],
+        )
         rec.update(
             status="ok", n_chips=P, compile_s=round(time.time() - t0, 2),
             color_coll_count=analysis["coll_count"],
@@ -199,6 +221,7 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
             recolor_coll_bytes=analysis_rc["coll_bytes"],
             recolor_wire16_coll_bytes=analysis_rc16["coll_bytes"],
             sparse=sparse_rec,
+            pipeline=pipeline_rec,
             graph=dict(n=g.n, m=g.m, P=P,
                        n_local_max=pg.n_local_max,
                        max_boundary=pg.max_boundary,
