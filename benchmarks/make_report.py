@@ -1,9 +1,80 @@
-"""Regenerate the EXPERIMENTS.md §Roofline table from dry-run JSONs."""
+"""Bench/report tables from the checked-in JSON artifacts.
+
+  python benchmarks/make_report.py bench [root]   — the README's bench
+        summary table, regenerated from the BENCH_*.json files
+  python benchmarks/make_report.py [mesh] [dir]   — the EXPERIMENTS.md
+        §Roofline table from dry-run JSONs (legacy default)
+"""
 from __future__ import annotations
 
 import json
 import sys
 from pathlib import Path
+
+
+def _geomean(xs):
+    import math
+    xs = [max(float(x), 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / max(len(xs), 1))
+
+
+def bench_table(root: str | Path = ".") -> str:
+    """One-line headline per BENCH_*.json (markdown; README §Benchmarks)."""
+    root = Path(root)
+    rows = []
+
+    def rec(name):
+        p = root / f"BENCH_{name}.json"
+        return json.loads(p.read_text()) if p.exists() else None
+
+    r = rec("hotpath")
+    if r:
+        rows.append((
+            "hotpath", f"{r['graph']} P={r['P']}",
+            f"chunked-ELL recolor **{r['recolor']['speedup']:.1f}x** the "
+            f"dense-occupancy path; tile-parallel supersteps "
+            f"{r['speculative']['speedup']:.1f}x the scalar loop"))
+    r = rec("comm")
+    if r:
+        top = max(r["sweep"], key=lambda s: s["P"])
+        rows.append((
+            "comm", f"{r['graph']} P={top['P']}",
+            f"sparse ships **{top['bytes_reduction_color'] * 100:.0f}%** / "
+            f"{top['bytes_reduction_recolor'] * 100:.0f}% fewer bytes "
+            f"(color/recolor) than all-gather, identical colorings"))
+    r = rec("d2")
+    if r:
+        grid = [s for s in r["sweep"] if s["graph"].startswith("grid")]
+        if grid:
+            top = max(grid, key=lambda s: s["bytes_reduction_color"])
+            rows.append((
+                "d2", f"{top['graph']} P={top['P']}",
+                f"distance-2 over the two-hop halo: sparse ships "
+                f"**{top['bytes_reduction_color'] * 100:.0f}%** fewer bytes "
+                f"on structured meshes"))
+    r = rec("pipeline")
+    if r:
+        sp = _geomean([s["speedup"] for s in r["sweep"]])
+        wins = sum(s["rand_beats_ff"] for s in r["seeding"])
+        ps = ",".join(str(p) for p in sorted({s["P"] for s in r["sweep"]}))
+        rows.append((
+            "pipeline", f"K={r['n_iters']}, P∈{{{ps}}}",
+            f"fused loop **{sp:.1f}x** (geomean) over the host loop, "
+            f"bitwise-identical colorings; RAND seeding beats FF after "
+            f"recoloring in {wins}/{len(r['seeding'])} cells"))
+    r = rec("serve")
+    if r:
+        rows.append((
+            "serve", f"{r['n_graphs']}-graph RMAT mix P={r['P']}",
+            f"batched dispatch **{r['speedup']:.1f}x** "
+            f"({r['graphs_per_s_batched']:.1f} vs "
+            f"{r['graphs_per_s_seq']:.1f} graphs/s) over sequential "
+            f"per-graph dispatch on fresh traffic "
+            f"({r['n_buckets']} bucket programs vs one compile per graph)"))
+
+    out = ["| bench | setting | headline |", "|---|---|---|"]
+    out += [f"| {a} | {b} | {c} |" for a, b, c in rows]
+    return "\n".join(out)
 
 
 def table(dryrun_dir="experiments/dryrun_final", mesh="pod16x16"):
@@ -39,6 +110,9 @@ def table(dryrun_dir="experiments/dryrun_final", mesh="pod16x16"):
 
 
 if __name__ == "__main__":
-    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
-    d = sys.argv[2] if len(sys.argv) > 2 else "experiments/dryrun_final"
-    print(table(d, mesh))
+    if len(sys.argv) > 1 and sys.argv[1] == "bench":
+        print(bench_table(sys.argv[2] if len(sys.argv) > 2 else "."))
+    else:
+        mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+        d = sys.argv[2] if len(sys.argv) > 2 else "experiments/dryrun_final"
+        print(table(d, mesh))

@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
   d2        distance-2 coloring over the two-hop halo (BENCH_d2.json)
   pipeline  fused device-resident color->recolor loop vs the host loop
             (BENCH_pipeline.json)
+  serve     batched multi-graph dispatch vs sequential per-graph dispatch
+            on a fresh-traffic RMAT mix (BENCH_serve.json)
   roofline  per-(arch x shape x mesh) roofline terms from the dry-run
 """
 import argparse
@@ -26,18 +28,19 @@ def main() -> None:
                     help="paper-scale graphs (slow); default is fast mode")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,seq,piggyback,dist,randomx,"
-                         "kernels,hotpath,comm,d2,pipeline,roofline")
+                         "kernels,hotpath,comm,d2,pipeline,serve,roofline")
     args = ap.parse_args()
     fast = not args.full
     from benchmarks import (bench_comm, bench_d2, bench_distributed,
                             bench_hotpath, bench_kernels, bench_piggyback,
                             bench_pipeline, bench_randomx, bench_roofline,
-                            bench_seq_recolor, bench_tables)
+                            bench_seq_recolor, bench_serve, bench_tables)
     mods = dict(tables=bench_tables, seq=bench_seq_recolor,
                 piggyback=bench_piggyback, dist=bench_distributed,
                 randomx=bench_randomx, kernels=bench_kernels,
                 hotpath=bench_hotpath, comm=bench_comm, d2=bench_d2,
-                pipeline=bench_pipeline, roofline=bench_roofline)
+                pipeline=bench_pipeline, serve=bench_serve,
+                roofline=bench_roofline)
     chosen = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")
     for name in chosen:

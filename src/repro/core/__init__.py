@@ -2,12 +2,15 @@
 
 Public API:
   Graph, PartitionedGraph, partition_graph      — graph substrate
+  pad_partition, bucket_graphs, GraphBucket      — batched shape buckets
   compute_order                                  — vertex-visit orderings
   ColorConfig, color_graph_sim/_sharded          — speculative coloring
   RecolorConfig, recolor_sim/_sharded, arc_sim   — iterative recoloring
   recolor_iterations, schedule_for_iteration     — ND-RAND%x schedules
   PipelineConfig, pipeline_sim/_sharded          — fused device-resident
                                                    color→recolor pipeline
+  color_many, color_many_sharded                 — batched multi-graph
+                                                   pipeline (DESIGN.md §8)
   message_stats                                  — piggybacking accounting
   presets.speed / presets.quality                — the paper's parameter sets
   select_colors                                  — shared bitset color-selection
@@ -17,12 +20,14 @@ from repro.kernels.ops import select_colors, select_colors_d2
 
 from . import ordering, presets, rmat, selection
 from .comm import AXIS, SCHEMES, AxisComm, CommConfig, stats_to_host
-from .graph import (CommPlan, Graph, PartitionedGraph, build_comm_plan,
+from .graph import (CommPlan, Graph, GraphBucket, PartitionedGraph,
+                    bucket_graphs, build_comm_plan, pad_partition,
                     partition_graph)
 from .ordering import compute_order
 from .piggyback import MessageStats, message_stats
-from .pipeline import (PipelineConfig, color_then_recolor, pipeline_sharded,
-                       pipeline_sim, recolor_loop_sim)
+from .pipeline import (PipelineConfig, color_many, color_many_sharded,
+                       color_then_recolor, pipeline_sharded, pipeline_sim,
+                       recolor_loop_sim)
 from .recolor import (ND, NI, RAND, RV, RecolorConfig, arc_sim,
                       recolor_iterations, recolor_sharded, recolor_sim,
                       schedule_for_iteration)
@@ -32,13 +37,14 @@ from .validate import assert_valid, check_coloring, colors_from_views
 
 __all__ = [
     "AXIS", "AxisComm", "ColorConfig", "CommConfig", "CommPlan", "Graph",
-    "MessageStats", "ND", "NI", "PartitionedGraph", "PipelineConfig",
-    "RAND", "RV", "RecolorConfig", "SCHEMES", "arc_sim", "assert_valid",
-    "build_comm_plan", "check_coloring", "color_graph_sharded",
-    "color_graph_sim", "color_spmd", "color_then_recolor",
+    "GraphBucket", "MessageStats", "ND", "NI", "PartitionedGraph",
+    "PipelineConfig", "RAND", "RV", "RecolorConfig", "SCHEMES", "arc_sim",
+    "assert_valid", "bucket_graphs", "build_comm_plan", "check_coloring",
+    "color_graph_sharded", "color_graph_sim", "color_many",
+    "color_many_sharded", "color_spmd", "color_then_recolor",
     "colors_from_views", "compute_order", "message_stats", "ordering",
-    "partition_graph", "pipeline_sharded", "pipeline_sim", "presets",
-    "recolor_iterations", "recolor_loop_sim", "recolor_sharded",
+    "pad_partition", "partition_graph", "pipeline_sharded", "pipeline_sim",
+    "presets", "recolor_iterations", "recolor_loop_sim", "recolor_sharded",
     "recolor_sim", "rmat", "schedule_for_iteration", "select_colors",
     "select_colors_d2", "selection", "stats_to_host",
 ]

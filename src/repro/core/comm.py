@@ -170,7 +170,8 @@ def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
                     ghost_shift: jnp.ndarray, ghost_pos: jnp.ndarray,
                     shifts: tuple, widths: tuple, P_size: int,
                     n_local_max: int, comm: AxisComm, wire_dtype=None,
-                    itemsize: int = 4, round_mask=None) -> jnp.ndarray:
+                    itemsize: int = 4, round_mask=None,
+                    byte_widths=None) -> jnp.ndarray:
     """One sparse neighbour-to-neighbour exchange (``ppermute`` rounds).
 
     Round ``r`` ships, for every shard p at once, the ``widths[r]`` boundary
@@ -185,6 +186,14 @@ def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
     ``round_mask`` (optional, (n_rounds,) bool, shard-uniform) lets callers
     skip rounds no destination currently needs (the sparse form of the
     paper's piggybacking, see recolor.py); skipped rounds cost no wire bytes.
+
+    ``byte_widths`` (optional, (n_rounds,) int32, traced) overrides the
+    *accounted* payload width per round without changing the shipped buffer
+    shape.  The batched multi-graph pipeline runs every graph of a bucket on
+    the union round schedule (``graph._union_comm_arrays``); a graph's own
+    narrower (or absent) round still ships the union-width buffer — the
+    extra entries are sentinel colors no receiver reads — but its measured
+    ``wire_bytes`` stay those of its own plan, bitwise matching a solo run.
     Returns ``(view, wire_bytes)``.
     """
     n_ghost_slots = view.shape[0] - n_local_max - 1
@@ -201,8 +210,9 @@ def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
                 payload = payload.astype(wire_dtype)
             buf = comm.ppermute(payload, perm)
             vals = buf[jnp.minimum(ghost_pos, w - 1)].astype(ghosts.dtype)
-            return (jnp.where(mine, vals, ghosts),
-                    total + jnp.int32(w * itemsize))
+            b = (jnp.int32(w * itemsize) if byte_widths is None
+                 else byte_widths[r].astype(jnp.int32) * itemsize)
+            return jnp.where(mine, vals, ghosts), total + b
 
         if round_mask is None:
             ghosts, total = do_round((ghosts, total))
@@ -226,13 +236,16 @@ def make_exchange(arrs, n_local_max: int, P_size: int, comm: AxisComm,
     """
     if cfg.scheme == SPARSE:
         shifts, widths = plan_static
+        # present only for bucketed (batched multi-graph) arrays: the
+        # per-graph byte-accounting override on the shared round schedule
+        byte_widths = arrs.get("round_widths")
 
         def exchange(view, round_mask=None):
             return exchange_sparse(
                 view, arrs["send_slot"], arrs["ghost_shift"],
                 arrs["ghost_pos"], shifts, widths, P_size, n_local_max,
                 comm, wire_dtype=cfg.wire_dtype, itemsize=cfg.itemsize,
-                round_mask=round_mask)
+                round_mask=round_mask, byte_widths=byte_widths)
 
         return exchange
 

@@ -482,6 +482,223 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     )
 
 
+def pad_partition(pg: PartitionedGraph, *, n_local_max: int | None = None,
+                  max_ghost: int | None = None, max_boundary: int | None = None,
+                  m_local_max: int | None = None, maxd: int | None = None,
+                  maxd2: int | None = None) -> PartitionedGraph:
+    """Re-pad a partition to larger target maxima (same graph, same blocks).
+
+    The batched multi-graph pipeline (DESIGN.md §8) stacks several
+    partitioned graphs on a leading axis, which requires every padded
+    dimension to agree across the batch.  This widens the device layout of
+    ``pg`` to the given targets and remaps every slot id to the new
+    numbering: local slots are unchanged, ghost slots shift by
+    ``n_local_max - pg.n_local_max``, and the sentinel moves to the new
+    ``n_slots - 1``.  New padding entries are inert by construction (ELL
+    pads point at the sentinel, order/``gvid``/``prio`` pads are -1, padded
+    local rows have no neighbours and are never visited), so any driver run
+    on the padded partition colors the same graph.
+
+    NOTE: padding is *not* bitwise-neutral for randomized selection —
+    per-slot random draws (Random-X Fit) depend on ``n_slots``, so a padded
+    run is reproducible against runs at the same padded shape, not against
+    the unpadded one.  First-Fit/Staggered paths are shape-independent.
+    """
+    new_nlm = pg.n_local_max if n_local_max is None else int(n_local_max)
+    new_mg = pg.max_ghost if max_ghost is None else int(max_ghost)
+    new_mb = pg.max_boundary if max_boundary is None else int(max_boundary)
+    new_ml = pg.m_local_max if m_local_max is None else int(m_local_max)
+    new_maxd = pg.maxd if maxd is None else int(maxd)
+    new_maxd2 = pg.maxd2 if maxd2 is None else int(maxd2)
+    assert new_nlm >= pg.n_local_max and new_mg >= pg.max_ghost
+    assert new_mb >= pg.max_boundary and new_ml >= pg.m_local_max
+    assert new_maxd >= pg.maxd and new_maxd2 >= pg.maxd2
+    if (new_nlm, new_mg, new_mb, new_ml, new_maxd, new_maxd2) == (
+            pg.n_local_max, pg.max_ghost, pg.max_boundary, pg.m_local_max,
+            pg.maxd, pg.maxd2):
+        return pg
+
+    P = pg.P
+    old_nlm, old_sent = pg.n_local_max, pg.sentinel
+    new_sent = new_nlm + new_mg
+    d_ghost = new_nlm - old_nlm
+
+    def remap(a: np.ndarray) -> np.ndarray:
+        """Old-layout slot ids -> new layout (locals keep, ghosts shift)."""
+        out = np.where(a >= old_nlm, a + d_ghost, a)
+        return np.where(a == old_sent, new_sent, out).astype(np.int32)
+
+    def pad_axis(a: np.ndarray, axis: int, width: int, fill) -> np.ndarray:
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, width - a.shape[axis])
+        return np.pad(a, pad, constant_values=fill)
+
+    indptr = pad_axis(pg.indptr, 1, new_nlm + 1, 0)
+    indptr[:, old_nlm + 1:] = indptr[:, old_nlm:old_nlm + 1]
+    indices = pad_axis(remap(pg.indices), 1, new_ml, new_sent)
+    edge_src = np.where(pg.edge_src == old_nlm, new_nlm, pg.edge_src)
+    edge_src = pad_axis(edge_src.astype(np.int32), 1, new_ml, new_nlm)
+    nbr = pad_axis(pad_axis(remap(pg.nbr), 2, new_maxd, new_sent),
+                   1, new_nlm, new_sent)
+    boundary = pad_axis(remap(pg.boundary), 1, new_mb, new_sent)
+    ghost_owner = pad_axis(pg.ghost_owner, 1, new_mg, 0)
+    ghost_slot = pad_axis(pg.ghost_slot, 1, new_mg, 0)
+    gvid = np.full((P, new_sent + 1), -1, dtype=np.int32)
+    prio = np.full((P, new_sent + 1), -1, dtype=np.int32)
+    gvid[:, :old_nlm] = pg.gvid[:, :old_nlm]
+    gvid[:, new_nlm:new_nlm + pg.max_ghost] = pg.gvid[:, old_nlm:old_sent]
+    prio[:, :old_nlm] = pg.prio[:, :old_nlm]
+    prio[:, new_nlm:new_nlm + pg.max_ghost] = pg.prio[:, old_nlm:old_sent]
+    is_internal = pad_axis(pg.is_internal, 1, new_nlm, False)
+    degree = pad_axis(pg.degree, 1, new_nlm, 0)
+    nbr2 = None
+    if pg.nbr2 is not None:
+        nbr2 = pad_axis(pad_axis(remap(pg.nbr2), 2, max(new_maxd2, 1),
+                                 new_sent), 1, new_nlm, new_sent)
+
+    return dataclasses.replace(
+        pg, n_local_max=new_nlm, max_ghost=new_mg, max_boundary=new_mb,
+        m_local_max=new_ml, maxd=new_maxd, maxd2=new_maxd2,
+        indptr=indptr, indices=indices, nbr=nbr, edge_src=edge_src,
+        boundary=boundary, ghost_owner=ghost_owner, ghost_slot=ghost_slot,
+        gvid=gvid, prio=prio, is_internal=is_internal, degree=degree,
+        nbr2=nbr2)
+
+
+def _union_comm_arrays(members) -> tuple[tuple, list[dict[str, np.ndarray]]]:
+    """One shared sparse round schedule for a bucket of padded partitions.
+
+    The sparse exchange unrolls a *static* ``(shifts, widths)`` schedule
+    (part of the jit cache key), so every graph in a batch must execute the
+    same rounds.  The shared schedule is the union of the members' ring
+    shifts, each padded to the bucket-max width.  A member without traffic
+    on some shift gets an all-sentinel send row for that round (its ghosts
+    never match the shift, so the round cannot move its view) and a zero in
+    its ``round_widths`` vector — the traced byte-accounting override
+    (``comm.exchange_sparse``) that keeps each graph's measured
+    ``wire_bytes`` identical to a solo run under its own plan.
+
+    Returns ``((shifts, widths), per-member array dicts)`` where each dict
+    carries ``send_slot``/``ghost_shift``/``ghost_pos``/``shift_to_round``
+    in the shared schedule plus ``round_widths`` ``(P, n_rounds)`` int32.
+    """
+    P = members[0].P
+    plans = [m.comm_plan for m in members]
+    width_of = [dict(zip(pl.shifts, pl.widths)) for pl in plans]
+    shifts = tuple(sorted({k for pl in plans for k in pl.shifts}))
+    widths = tuple(max(w.get(k, 0) for w in width_of) for k in shifts)
+    max_send = max(widths, default=0)
+    n_rounds = max(len(shifts), 1)
+
+    s2r = np.full((P,), -1, dtype=np.int32)
+    for r, k in enumerate(shifts):
+        s2r[k] = r
+    shift_to_round = np.broadcast_to(s2r, (P, P)).copy()
+
+    out = []
+    for m, pl, w in zip(members, plans, width_of):
+        send = np.full((P, n_rounds, max(max_send, 1)), m.sentinel, np.int32)
+        rw = np.zeros((n_rounds,), np.int32)
+        for r, k in enumerate(shifts):
+            if k in w:
+                rm = pl.shifts.index(k)
+                send[:, r, :pl.send_slot.shape[2]] = pl.send_slot[:, rm]
+                rw[r] = w[k]
+        out.append(dict(
+            send_slot=send, ghost_shift=pl.ghost_shift, ghost_pos=pl.ghost_pos,
+            shift_to_round=shift_to_round,
+            round_widths=np.broadcast_to(rw, (P, n_rounds)).copy()))
+    return (shifts, widths), out
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBucket:
+    """Same-shape padded partitions, stackable on a leading graph axis.
+
+    Built by ``bucket_graphs``.  ``members[j]`` is the padded partition of
+    input graph ``indices[j]``; every padded dimension (and hence every
+    device-array shape) agrees across members, so ``stacked_arrays`` returns
+    ``(B, P, ...)`` arrays the batched pipeline can vmap over.  The sparse
+    comm schedule is the members' union (``plan_static``), with per-member
+    ``round_widths`` keeping measured wire bytes exact per graph.
+    """
+
+    indices: tuple   # positions of the members in the bucket_graphs() input
+    members: tuple   # PartitionedGraph instances, padded to shared dims
+
+    @property
+    def B(self) -> int:
+        return len(self.members)
+
+    @property
+    def P(self) -> int:
+        return self.members[0].P
+
+    @functools.cached_property
+    def _union_plan(self) -> tuple[tuple, list[dict[str, np.ndarray]]]:
+        return _union_comm_arrays(self.members)
+
+    @property
+    def plan_static(self) -> tuple:
+        """Hashable shared ``(shifts, widths)`` — the batch's jit cache key."""
+        return self._union_plan[0]
+
+    def member_arrays(self, j: int, *, sparse: bool = True) -> dict:
+        """Device dict of member ``j`` under the *shared* comm schedule."""
+        out = self.members[j].arrays(sparse=False)
+        if sparse:
+            out = dict(out, **self._union_plan[1][j])
+        return out
+
+    def stacked_arrays(self, *, sparse: bool = True) -> dict[str, np.ndarray]:
+        """All members stacked on a leading graph axis: ``(B, P, ...)``."""
+        per = [self.member_arrays(j, sparse=sparse) for j in range(self.B)]
+        return {k: np.stack([d[k] for d in per]) for k in per[0]}
+
+
+def _ceil_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+def bucket_graphs(pgs, *, round_pow2: bool = True) -> list:
+    """Group partitioned graphs into shape buckets for batched execution.
+
+    Bucket key: ``(P, halo, n_local_max, maxd, maxd2)`` with the size-like
+    dims rounded up to the next power of two (``round_pow2=True``, the
+    default) so near-sized graphs share one bucket and one compiled program
+    at <= 2x padding waste per keyed dim; ``round_pow2=False`` groups only
+    exactly-matching dims.  Within a bucket every member is re-padded
+    (``pad_partition``) to the bucket ceilings; the remaining pad widths
+    (``max_ghost``/``max_boundary``/``m_local_max``) take the member max,
+    also pow2-rounded by default — with every padded dim a power of two,
+    a long-running service's bucket *shapes* are stable across request
+    waves, so the compiled batch programs keep hitting the jit cache
+    (``color_many(pad_batch=True)`` stabilizes the batch axis the same
+    way).  Members must already share ``P`` and ``halo`` to share a bucket.
+
+    Returns ``GraphBucket`` objects covering the input exactly;
+    ``bucket.indices`` maps members back to input positions.
+    """
+    rnd = _ceil_pow2 if round_pow2 else int
+    groups: dict[tuple, list[int]] = {}
+    for i, pg in enumerate(pgs):
+        key = (pg.P, pg.halo, rnd(pg.n_local_max), rnd(pg.maxd),
+               rnd(pg.maxd2) if pg.halo == 2 else 0)
+        groups.setdefault(key, []).append(i)
+    buckets = []
+    for key in sorted(groups):
+        idx = groups[key]
+        mem = [pgs[i] for i in idx]
+        members = tuple(pad_partition(
+            m, n_local_max=key[2], maxd=key[3],
+            maxd2=key[4] if key[1] == 2 else 0,
+            max_ghost=rnd(max(x.max_ghost for x in mem)),
+            max_boundary=rnd(max(x.max_boundary for x in mem)),
+            m_local_max=rnd(max(x.m_local_max for x in mem))) for m in mem)
+        buckets.append(GraphBucket(indices=tuple(idx), members=members))
+    return buckets
+
+
 def build_comm_plan(pg: PartitionedGraph) -> CommPlan:
     """Derive the sparse neighbour-to-neighbour schedule from the ghosts.
 

@@ -33,6 +33,18 @@ Rokos et al. 2015) applied to the iteration loop itself:
 (``recolor_loop_sim``); the host loop survives behind ``fused=False`` as the
 bitwise reference (tests/test_pipeline.py pins fused == host at P ∈
 {2, 4, 16}, both exchange schemes, distance 1 and 2).
+
+**Batched multi-graph pipeline** (``color_many`` / ``color_many_sharded``,
+DESIGN.md §8): production coloring traffic arrives as *many*
+small-to-medium graphs (per-batch conflict graphs, per-tile sparsity
+patterns), not one giant one.  ``bucket_graphs`` pads the partitions into
+shape buckets; within a bucket the fused program is lifted over a leading
+graph axis with ``vmap`` — per-graph RNG keys, per-graph ``(K, n_stats)``
+histories, and a per-graph adaptive stop: ``vmap`` of ``lax.while_loop``
+runs while *any* graph's predicate holds and select-masks the body on
+finished lanes, so each lane's result is bitwise the solo run's
+(tests/test_serve.py pins this per graph, across bucket boundaries, both
+exchange schemes, distance 1 and 2).
 """
 from __future__ import annotations
 
@@ -43,11 +55,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import ordering
 from .comm import SPARSE, AxisComm, run_sharded, run_sim, stats_to_host
-from .graph import PartitionedGraph
+from .graph import PartitionedGraph, _ceil_pow2, bucket_graphs
+from .ordering import compute_order
 from .recolor import (ALL_PERMS, ND, PERM_IDS, RecolorConfig, class_sizes,
-                      permutation_rank_traced, recolor_pass_spmd,
-                      schedule_for_iteration)
+                      permutation_rank, permutation_rank_traced,
+                      recolor_pass_spmd, schedule_for_iteration)
 from .speculative import ColorConfig, _apply_partial, color_spmd
 
 # Column layout of the device-resident per-iteration history.  ``ran`` marks
@@ -59,7 +73,15 @@ HISTORY_STATS = ("n_colors", "n_colors_distinct", "n_colors_before",
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
-    """Static configuration of the fused color→recolor pipeline."""
+    """Static configuration of the fused color→recolor pipeline.
+
+    ``n_iters`` (K) caps the recoloring iterations; ``patience`` (in
+    iterations, 0 = off) is the adaptive stop on the global distinct-color
+    count; the color/recolor stages keep their own configs (``color=None``
+    = recolor-only).  Drivers: ``pipeline_sim`` / ``pipeline_sharded`` for
+    one graph, ``color_many`` / ``color_many_sharded`` for a bucketed
+    batch — all four bitwise-identical per graph for the same keys.
+    """
 
     color: ColorConfig | None = None  # None = recolor-only (seed view given)
     recolor: RecolorConfig = RecolorConfig()
@@ -114,12 +136,33 @@ def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
     kind_ids = jnp.asarray(np.asarray(cfg.kind_ids, np.int32))
     patience = cfg.patience if cfg.patience else K + 1  # K+1 never trips
 
+    # Narrow the traced permutation switch to the kinds the static schedule
+    # actually uses: vmap lowers ``lax.switch`` to run-every-branch + select,
+    # so a batched (color_many) run would otherwise pay all four rank sorts
+    # per iteration per graph.  A single-kind schedule (e.g. pure ND) skips
+    # the switch entirely; ND-RAND%x narrows it to two branches.  Each
+    # branch is the same static function, so this is bitwise-neutral.
+    present = tuple(sorted(set(cfg.kind_ids)))
+    if len(present) == 1:
+        kind0 = ALL_PERMS[present[0]]
+        rank_of = lambda sizes, kid, ikey: permutation_rank(sizes, kind0,
+                                                            ikey)
+    elif len(present) < len(ALL_PERMS):
+        present_arr = jnp.asarray(np.asarray(present, np.int32))
+        branches = [lambda s, ky, k=ALL_PERMS[p]: permutation_rank(s, k, ky)
+                    for p in present]
+        rank_of = lambda sizes, kid, ikey: jax.lax.switch(
+            jnp.searchsorted(present_arr, kid).astype(jnp.int32), branches,
+            sizes, ikey)
+    else:
+        rank_of = permutation_rank_traced
+
     def body(state):
         view, it, best, stall, hist, sizes, n_oor = state
         ikey = jax.random.fold_in(key, it)           # host loop's per-it key
         kid = kind_ids[it - 1]
         n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
-        rank = permutation_rank_traced(sizes, kid, ikey)
+        rank = rank_of(sizes, kid, ikey)
         view, st = recolor_pass_spmd(arrs, view, rank, n_classes, rcfg,
                                      P_size=P_size, plan_static=plan_static)
         # post-iteration sizes double as the next iteration's schedule input
@@ -246,9 +289,15 @@ def pipeline_sim(pg: PartitionedGraph, order, cfg: PipelineConfig, *,
                  marked=None, color_key=None, recolor_key=None):
     """Run the fused pipeline *simulated* on one device (P vmap lanes).
 
-    Returns ``(view, result)`` where ``result`` holds the initial-coloring
-    stats (``"color"``), the per-iteration ``"history"`` (same dicts as
-    ``recolor_iterations``) and ``"n_iters_run"`` (adaptive stop included).
+    ``order``/``marked`` as ``color_graph_sim``; ``color_key`` /
+    ``recolor_key`` default to ``key(cfg.color.seed)`` / ``key(cfg.seed)``.
+    Returns ``(view, result)``: ``view`` is the final ``(P, n_slots)``
+    device view and ``result`` holds the initial-coloring stats
+    (``"color"``, keys as ``color_graph_sim``), the per-iteration
+    ``"history"`` (one dict per executed iteration, keys as
+    ``recolor_sim`` plus ``perm``/``iteration``) and ``"n_iters_run"``
+    (adaptive stop included).  ``pipeline_sharded`` is the
+    bitwise-identical ``workers``-mesh variant.
     """
     assert cfg.color is not None, "pipeline_sim needs cfg.color"
     arrs = _pipeline_arrays(pg, cfg)
@@ -272,3 +321,184 @@ def pipeline_sharded(pg: PartitionedGraph, order, cfg: PipelineConfig, mesh,
         lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2)))(
             arrs, jnp.asarray(order), ck, rk)
     return _pipeline_result(*out)
+
+
+# ------------------------------------------- batched multi-graph pipeline --
+
+@lru_cache(maxsize=64)
+def _many_sim_fn(P, cfg, plan_static):
+    """One jitted program per (P, config, shared plan): vmap over graphs of
+    vmap over shards — retraced per batch shape, cached across batches."""
+    fn = partial(color_then_recolor, cfg=cfg, P_size=P,
+                 plan_static=plan_static)
+    inner = lambda arrs, order, ck, rk: run_sim(fn, P, (arrs, order),
+                                                (ck, rk))
+    return jax.jit(jax.vmap(inner))
+
+
+@lru_cache(maxsize=64)
+def _many_sharded_fn(P, cfg, plan_static, mesh):
+    """Cached mesh dispatch per (P, config, plan, mesh) — without it every
+    flush would rebuild the vmap/jit wrappers and recompile, defeating the
+    pow2 shape bucketing the serving path relies on."""
+    fn = jax.vmap(partial(color_then_recolor, cfg=cfg, P_size=P,
+                          plan_static=plan_static))
+    return jax.jit(
+        lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2)))
+
+
+def _keys_many(cfg: PipelineConfig, n, color_keys, recolor_keys):
+    """Per-graph key lists: defaults fold the graph's input position into
+    the config seeds, so every graph gets an independent stream and a solo
+    rerun with the same folded key reproduces its lane bitwise."""
+    if color_keys is None:
+        base = jax.random.key(cfg.color.seed)
+        color_keys = [jax.random.fold_in(base, i) for i in range(n)]
+    if recolor_keys is None:
+        base = jax.random.key(cfg.seed)
+        recolor_keys = [jax.random.fold_in(base, i) for i in range(n)]
+    assert len(color_keys) == n and len(recolor_keys) == n
+    return list(color_keys), list(recolor_keys)
+
+
+def _bucket_order(bucket, cfg: PipelineConfig, orders, marked):
+    """(B, P, n_local_max) visit order for one bucket's members.
+
+    ``orders`` is an ordering-kind string (computed per padded member —
+    identical to padding the original's order, local slots are unchanged)
+    or a per-graph sequence of ``(P, n_local_max)`` arrays padded here with
+    -1 to the bucket width.  ``marked`` masks are padded with False.
+    """
+    rows = []
+    for j, gi in enumerate(bucket.indices):
+        m = bucket.members[j]
+        if orders is None or isinstance(orders, str):
+            o = compute_order(m, orders or ordering.INTERNAL_FIRST)
+        else:
+            o = np.asarray(orders[gi])
+            o = np.pad(o, ((0, 0), (0, m.n_local_max - o.shape[1])),
+                       constant_values=-1)
+        mk = None if marked is None else marked[gi]
+        if mk is not None:
+            mk = np.asarray(mk, dtype=bool)
+            mk = np.pad(mk, ((0, 0), (0, m.n_local_max - mk.shape[1])))
+        rows.append(_apply_partial(o, cfg.color, mk))
+    return np.stack(rows)
+
+
+def _pad_batch_lanes(st, order_b, cks_b, rks_b, B):
+    """Round the batch axis up to a power of two with dummy lanes.
+
+    The extra lanes replicate member 0 (lanes are independent, results are
+    dropped on unpacking), so a service's batch programs see pow2 batch
+    shapes only and keep hitting the jit cache as queue depth fluctuates.
+    """
+    ext = _ceil_pow2(B) - B
+    if ext:
+        st = {k: np.concatenate([v, np.repeat(v[:1], ext, axis=0)])
+              for k, v in st.items()}
+        order_b = np.concatenate(
+            [order_b, np.repeat(order_b[:1], ext, axis=0)])
+        cks_b = cks_b + [cks_b[0]] * ext
+        rks_b = rks_b + [rks_b[0]] * ext
+    return st, order_b, cks_b, rks_b
+
+
+def _bucket_inputs(bucket, cfg, orders, marked, cks, rks, pad_batch):
+    """Per-bucket dispatch inputs, shared by the sim and sharded drivers."""
+    st = bucket.stacked_arrays(sparse=cfg.needs_sparse_plan)
+    order_b = _bucket_order(bucket, cfg, orders, marked)
+    cks_b = [cks[i] for i in bucket.indices]
+    rks_b = [rks[i] for i in bucket.indices]
+    if pad_batch:
+        st, order_b, cks_b, rks_b = _pad_batch_lanes(
+            st, order_b, cks_b, rks_b, bucket.B)
+    ps = bucket.plan_static if cfg.needs_sparse_plan else None
+    return st, order_b, cks_b, rks_b, ps
+
+
+def _unpack_bucket(out, bucket, bi, pgs, results):
+    """(B, P, ...) batch outputs -> per-graph result dicts (input order)."""
+    view, cstats, hist, n_run = out
+    view, hist = np.asarray(view), np.asarray(hist)
+    n_run = np.asarray(n_run)
+    cstats = {k: np.asarray(v) for k, v in cstats.items()}
+    for j, gi in enumerate(bucket.indices):
+        v = view[j]
+        results[gi] = dict(
+            view=v,
+            colors=pgs[gi].gather_global_colors(
+                v[:, :bucket.members[j].n_local_max]),
+            color={k: int(a[j].max()) for k, a in cstats.items()},
+            history=_history_to_host(hist[j]),
+            n_iters_run=int(n_run[j].max()),
+            bucket=bi)
+    return results
+
+
+def color_many(pgs, cfg: PipelineConfig, *, orders=None, marked=None,
+               color_keys=None, recolor_keys=None, buckets=None,
+               pad_batch: bool = False):
+    """Color a batch of partitioned graphs through one fused program each
+    bucket (sim executor) — the batched service's dispatch core.
+
+    ``pgs`` — same-``P`` ``PartitionedGraph`` list (``halo`` per
+    ``cfg``'s distance).  ``orders`` — an ``ordering`` kind string (default
+    ``internal_first``) or per-graph ``(P, n_local_max)`` arrays.
+    ``marked`` — per-graph partial-coloring masks (``cfg.color.partial``).
+    ``color_keys``/``recolor_keys`` — per-graph JAX keys; the default folds
+    each graph's input position into the config seeds.  ``buckets`` — a
+    precomputed ``bucket_graphs(pgs)`` result (a server that already
+    bucketed its queue passes it to skip the host-side re-pad).
+    ``pad_batch=True`` rounds every bucket's batch axis up to a power of
+    two with dropped dummy lanes, so batch-program shapes stay stable as
+    queue depth fluctuates (jit-cache friendly serving).
+
+    Returns one dict per input graph (input order): ``view`` ``(P,
+    n_slots)`` padded device view, ``colors`` ``(n_global,)`` 1-based,
+    ``color`` initial-coloring stats, ``history``/``n_iters_run`` as
+    ``pipeline_sim``, and the ``bucket`` index.  Each graph's view and
+    history are bitwise a solo ``pipeline_sim`` run on its padded member
+    (``bucket.members[j]``) with the same keys.
+    """
+    assert cfg.color is not None, "color_many needs cfg.color"
+    pgs = list(pgs)
+    if buckets is None:
+        buckets = bucket_graphs(pgs)
+    cks, rks = _keys_many(cfg, len(pgs), color_keys, recolor_keys)
+    results = [None] * len(pgs)
+    for bi, bucket in enumerate(buckets):
+        st, order_b, cks_b, rks_b, ps = _bucket_inputs(
+            bucket, cfg, orders, marked, cks, rks, pad_batch)
+        out = _many_sim_fn(bucket.P, cfg, ps)(
+            {k: jnp.asarray(v) for k, v in st.items()},
+            jnp.asarray(order_b), jnp.stack(cks_b), jnp.stack(rks_b))
+        _unpack_bucket(out, bucket, bi, pgs, results)
+    return results
+
+
+def color_many_sharded(pgs, cfg: PipelineConfig, mesh, *, orders=None,
+                       marked=None, color_keys=None, recolor_keys=None,
+                       buckets=None, pad_batch: bool = False):
+    """``color_many`` on a real mesh axis ``workers``: the graph batch axis
+    rides *inside* each shard (vmap under shard_map), so one collective
+    program serves the whole bucket — same per-graph results as the sim
+    executor."""
+    assert cfg.color is not None, "color_many_sharded needs cfg.color"
+    pgs = list(pgs)
+    if buckets is None:
+        buckets = bucket_graphs(pgs)
+    cks, rks = _keys_many(cfg, len(pgs), color_keys, recolor_keys)
+    results = [None] * len(pgs)
+    for bi, bucket in enumerate(buckets):
+        st, order_b, cks_b, rks_b, ps = _bucket_inputs(
+            bucket, cfg, orders, marked, cks, rks, pad_batch)
+        # leading axis P for shard_map; per-shard arrays carry (B, ...)
+        arrs = {k: jnp.moveaxis(jnp.asarray(v), 0, 1) for k, v in st.items()}
+        order_b = jnp.moveaxis(jnp.asarray(order_b), 0, 1)
+        out = _many_sharded_fn(bucket.P, cfg, ps, mesh)(
+            arrs, order_b, jnp.stack(cks_b), jnp.stack(rks_b))
+        # outputs carry (P, B, ...): put the graph axis back in front
+        out = jax.tree.map(lambda x: np.moveaxis(np.asarray(x), 0, 1), out)
+        _unpack_bucket(out, bucket, bi, pgs, results)
+    return results

@@ -41,20 +41,42 @@ def quality(x: int = 10, max_colors: int = 1024, superstep: int = 512,
     )
 
 
+def pipeline_config(preset: Preset, *, n_iters: int | None = None,
+                    patience: int = 0, seed: int = 0):
+    """A preset as one fused-pipeline config (``pipeline_sim``-ready).
+
+    ``n_iters`` overrides the preset's recoloring budget (``patience`` adds
+    the adaptive stop on top); the RNG streams match ``run_preset``'s, so
+    both entry points produce identical colorings for the same seed.
+    """
+    from .pipeline import PipelineConfig
+
+    return PipelineConfig(
+        color=dataclasses.replace(preset.color_cfg, seed=seed),
+        recolor=RecolorConfig(max_colors=preset.color_cfg.max_colors,
+                              seed=seed),
+        n_iters=preset.recolor_iters if n_iters is None else n_iters,
+        base_perm=preset.recolor_perm, patience=patience, seed=seed)
+
+
 def run_preset(pg, preset: Preset, seed: int = 0):
-    """Initial coloring + recoloring per the preset; returns (view, log)."""
+    """Initial coloring + recoloring per the preset; returns (view, log).
+
+    Runs device-resident through the fused pipeline when the preset
+    recolors (one jitted program; bitwise the split dispatch it replaced);
+    ``log`` is one dict per stage: ``stage="initial"`` with the coloring
+    stats, then one ``stage="recolor"`` entry per executed iteration.
+    """
     from . import ordering as ord_mod
-    from .recolor import recolor_iterations
+    from .pipeline import pipeline_sim
     from .speculative import color_graph_sim
 
     order = ord_mod.compute_order(pg, preset.ordering)
-    cfg = dataclasses.replace(preset.color_cfg, seed=seed)
-    view, stats = color_graph_sim(pg, order, cfg)
-    log = [dict(stage="initial", **stats)]
-    if preset.recolor_iters:
-        rcfg = RecolorConfig(max_colors=cfg.max_colors, seed=seed)
-        view, hist = recolor_iterations(pg, view, preset.recolor_iters, rcfg,
-                                        base_perm=preset.recolor_perm,
-                                        seed=seed)
-        log += [dict(stage="recolor", **h) for h in hist]
+    if not preset.recolor_iters:
+        cfg = dataclasses.replace(preset.color_cfg, seed=seed)
+        view, stats = color_graph_sim(pg, order, cfg)
+        return view, [dict(stage="initial", **stats)]
+    view, res = pipeline_sim(pg, order, pipeline_config(preset, seed=seed))
+    log = [dict(stage="initial", **res["color"])]
+    log += [dict(stage="recolor", **h) for h in res["history"]]
     return view, log

@@ -88,7 +88,16 @@ def _default_key(seed: int):
 
 @dataclasses.dataclass(frozen=True)
 class RecolorConfig:
-    """Static configuration of one recoloring iteration."""
+    """Static configuration of one recoloring iteration.
+
+    Units: ``max_colors`` bounds the *seed* coloring's ids (32-aligned);
+    ``chunk`` is vertices selected per ELL tile (clamped to the shard's
+    row count at trace time).  Drivers: ``recolor_sim`` /
+    ``recolor_sharded`` run one iteration (sim vs ``workers`` mesh,
+    bitwise identical); ``arc_sim`` is the asynchronous variant;
+    ``recolor_iterations`` / ``pipeline.PipelineConfig`` run schedules of
+    iterations device-resident.
+    """
 
     max_colors: int = 1024         # bound on colors of the SEED coloring
     piggyback: bool = True         # paper §3.1 (False = exchange every step)
@@ -297,7 +306,12 @@ def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
     n_local = arrs["n_local"]
     nbr = arrs["nbr"]
     mc = cfg.max_colors
-    chunk = cfg.chunk
+    # chunk size is bitwise-invariant (within-class chunks never interact:
+    # a class is an independent set, so no chunk reads another's writes),
+    # so clamp it to the row count — a chunk wider than the shard's vertex
+    # range would gather pure padding every class step, which dominates the
+    # runtime of small graphs (and of every lane of the batched pipeline).
+    chunk = min(cfg.chunk, n_local_max)
     sparse = cfg.scheme == SPARSE
     if sparse and (P_size is None or plan_static is None):
         raise ValueError("sparse scheme needs P_size and plan_static "
@@ -461,6 +475,17 @@ def _rc_sim_fn(P, perm_kind, cfg, plan_static):
 
 def recolor_sim(pg: PartitionedGraph, view, perm_kind: str,
                 cfg: RecolorConfig, key=None):
+    """One synchronous RC iteration, simulated on one device.
+
+    ``view`` — ``(P, n_slots)`` valid coloring with fresh ghosts (a driver
+    output); ``perm_kind`` — one of ``RV``/``NI``/``ND``/``RAND``; ``key``
+    defaults to a per-call-counter fold of ``cfg.seed`` (pass an explicit
+    key for reproducible RAND permutations).  Returns ``(view, stats)``
+    with python-int stats: ``n_colors`` (max id), ``n_colors_distinct``,
+    ``n_colors_before``, ``n_exchanges`` (executed), ``n_steps`` (= class
+    count), ``wire_bytes``, ``n_out_of_range``.  ``recolor_sharded`` is
+    the bitwise-identical ``workers``-mesh variant.
+    """
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
@@ -479,6 +504,12 @@ def _arc_sim_fn(P, perm_kind, rc_cfg, sp_cfg, plan_static):
 
 def arc_sim(pg: PartitionedGraph, view, perm_kind: str, rc_cfg: RecolorConfig,
             sp_cfg: ColorConfig, key=None):
+    """One asynchronous (aRC) iteration, simulated: order by local class
+    rank (``rc_cfg``, ``perm_kind``) and rerun the speculative framework
+    (``sp_cfg``) — conflicts possible, hence the repair rounds.  Shapes and
+    stats as ``color_graph_sim``; the key splits into independent rank and
+    repair streams.
+    """
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=sp_cfg.scheme == SPARSE).items()}
     if key is None:
@@ -491,6 +522,8 @@ def arc_sim(pg: PartitionedGraph, view, perm_kind: str, rc_cfg: RecolorConfig,
 
 def recolor_sharded(pg: PartitionedGraph, view, perm_kind: str,
                     cfg: RecolorConfig, mesh, key=None):
+    """``recolor_sim`` on a real mesh axis ``workers`` (same contract,
+    bitwise-identical results)."""
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:

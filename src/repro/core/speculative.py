@@ -91,7 +91,17 @@ def validate_color_bounds(max_colors: int, wire16: bool, backend: str):
 
 @dataclasses.dataclass(frozen=True)
 class ColorConfig:
-    """Static configuration of one distributed coloring run."""
+    """Static configuration of one distributed coloring run.
+
+    Units: ``superstep`` and ``tile`` are vertex counts per chunk (both
+    clamped to the shard's row count at trace time); ``max_colors`` is the
+    color-id bound (32-aligned — the bitset word width); ``exchange_every``
+    counts supersteps between boundary exchanges; ``max_rounds`` bounds the
+    speculate/repair rounds.  Drivers: ``color_graph_sim`` (one device, P
+    vmap lanes) and ``color_graph_sharded`` (real ``workers`` mesh axis)
+    run the identical program; ``color_spmd`` is the raw per-shard SPMD
+    function both wrap.
+    """
 
     max_colors: int = 1024
     superstep: int = 512           # paper's superstep size (vertices per chunk)
@@ -200,7 +210,7 @@ def _greedy_chunk(view, usage, order, rand_u32, start, count, arrs, p_idx,
 
 
 def _parallel_chunk(view, usage, order_pad, rand_u32, start, arrs, p_idx,
-                    cfg: ColorConfig):
+                    cfg: ColorConfig, superstep: int):
     """Color one superstep as tile-parallel sub-tiles against the stale view.
 
     Each sub-tile of ``cfg.tile`` vertices colors at once: one ELL-row gather
@@ -213,8 +223,8 @@ def _parallel_chunk(view, usage, order_pad, rand_u32, start, arrs, p_idx,
     clamp into unvisited territory.
     """
     n_slots = view.shape[0]
-    tile = min(cfg.tile, cfg.superstep)
-    n_tiles = -(-cfg.superstep // tile)
+    tile = min(cfg.tile, superstep)
+    n_tiles = -(-superstep // tile)
     offset = cfg.stagger_offset(p_idx)
 
     def tile_body(ti, carry):
@@ -326,7 +336,14 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
                              cfg.comm_config, plan_static)
     no_ex = lambda v: (v, jnp.int32(0))
 
-    S = cfg.superstep
+    # Clamp the superstep (and, downstream, the tile) to the shard's row
+    # count: every chunk/tile boundary at granularity >= n_local_max is
+    # equivalent to one at n_local_max (a round is always a single step and
+    # a single sub-tile covers every live vertex either way), so this is
+    # bitwise-identical — it only stops small graphs (and every lane of the
+    # batched pipeline) from gathering `superstep - n_local_max` rows of
+    # pure padding per round.
+    S = min(cfg.superstep, n_local_max)
     n_chunks_max = -(-n_local_max // S)
     view0 = jnp.zeros((n_slots,), jnp.int32)
     usage0 = jnp.zeros((cfg.max_colors,), jnp.int32)
@@ -356,7 +373,7 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
             if cfg.use_parallel_chunk:
                 view, usage = _parallel_chunk(view, usage, order_pad,
                                               rand_u32, si * S,
-                                              arrs, p_idx, cfg)
+                                              arrs, p_idx, cfg, S)
             else:
                 view, usage = _greedy_chunk(view, usage, order_r, rand_u32,
                                             si * S, S, arrs, p_idx, cfg)
@@ -440,7 +457,19 @@ def _apply_partial(order, cfg: ColorConfig, marked):
 
 def color_graph_sim(pg: PartitionedGraph, order, cfg: ColorConfig,
                     key=None, *, marked=None):
-    """Run distributed coloring *simulated* on one device (P vmap lanes)."""
+    """Run distributed coloring *simulated* on one device (P vmap lanes).
+
+    ``order`` — ``(P, n_local_max)`` int32 visit order of local slots, -1 =
+    skip (``compute_order``); ``key`` — JAX key (default
+    ``key(cfg.seed)``); ``marked`` — ``(P, n_local_max)`` bool host mask,
+    only with ``cfg.partial``.  Returns ``(view, stats)``: ``view`` is the
+    ``(P, n_slots)`` int32 device view (colors are 1-based; ghosts +
+    sentinel slots after ``n_local_max``; ``colors_from_views`` flattens it
+    to global ``(n,)`` colors) and ``stats`` are python ints — ``n_colors``
+    (max id), ``n_colors_distinct`` (the quality metric), ``n_rounds``,
+    ``n_exchanges``, ``wire_bytes`` (measured, per-shard max).
+    ``color_graph_sharded`` is the bitwise-identical mesh variant.
+    """
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
@@ -453,7 +482,9 @@ def color_graph_sim(pg: PartitionedGraph, order, cfg: ColorConfig,
 
 def color_graph_sharded(pg: PartitionedGraph, order, cfg: ColorConfig, mesh,
                         key=None, *, marked=None):
-    """Run distributed coloring on a real mesh axis ``workers``."""
+    """Run distributed coloring on a real mesh axis ``workers``
+    (shard_map); same contract and bitwise the same results as
+    ``color_graph_sim``."""
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:

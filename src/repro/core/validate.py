@@ -40,12 +40,22 @@ def check_coloring(g: Graph, colors: np.ndarray, *, distance: int = 1,
                    marked: np.ndarray | None = None) -> dict:
     """Validity + quality stats of a global coloring.
 
-    ``distance=2`` additionally requires any two (marked) vertices with a
-    common neighbour to differ in color.  ``marked`` restricts the checked
-    vertex set (partial coloring): unmarked vertices may stay uncolored and
-    never count as conflicts.  Sentinel colors (``<= 0``, e.g. a leaked
-    ``-1``) must never crash the checker — they are reported as uncolored
-    vertices with ``valid=False``.
+    ``colors`` — ``(g.n,)`` 1-based ints (0 = uncolored; from
+    ``colors_from_views`` or ``color_many``'s ``"colors"``).  ``distance=2``
+    additionally requires any two (marked) vertices with a common neighbour
+    to differ in color.  ``marked`` — ``(g.n,)`` bool — restricts the
+    checked vertex set (partial coloring): unmarked vertices may stay
+    uncolored and never count as conflicts.  Sentinel colors (``<= 0``,
+    e.g. a leaked ``-1``) must never crash the checker — they are reported
+    as uncolored vertices with ``valid=False``.
+
+    Returns a dict: ``valid``; ``n_conflicting_edges`` (undirected);
+    ``n_uncolored``; ``n_colors`` — *distinct* colors in use, the paper's
+    quality metric; ``max_color_id`` — the id bound (≥ ``n_colors`` on
+    gappy colorings); ``class_sizes`` — ``(max_color_id,)`` counts indexed
+    by color id - 1; ``class_balance`` — std/mean of the non-empty class
+    sizes (0 = perfectly balanced); and at distance 2
+    ``n_d2_conflicting_pairs``.
     """
     assert distance in (1, 2)
     colors = np.asarray(colors)

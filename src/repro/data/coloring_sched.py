@@ -67,6 +67,34 @@ def schedule(resources, n_samples: int, *, n_workers: int = 1,
     return groups, n_groups, log
 
 
+def schedule_many(batches, n_samples: int, *, n_workers: int = 1,
+                  n_iters: int = 1, seed: int = 0):
+    """Schedule MANY sample batches at once via the batched pipeline.
+
+    ``batches`` is a sequence of per-batch resource arrays (each as in
+    ``schedule``); every batch's conflict graph is partitioned and the
+    whole set is dispatched through ``core.color_many`` — bucketed padding,
+    one fused program per shape bucket (DESIGN.md §8), the serving shape of
+    a training pipeline that colors a fresh conflict graph per step.
+    Returns one ``(groups, n_groups, stats)`` triple per batch.
+    """
+    from repro.core import color_many
+
+    pgs = [partition_graph(conflict_graph(res, n_samples), n_workers,
+                           seed=seed) for res in batches]
+    preset = presets.quality(iters=n_iters)
+    cfg = presets.pipeline_config(preset, seed=seed)
+    out = []
+    for r in color_many(pgs, cfg, orders=preset.ordering, pad_batch=True):
+        colors = r["colors"]
+        n_groups = int(colors.max(initial=0))
+        groups = [np.nonzero(colors == c)[0] for c in range(1, n_groups + 1)]
+        out.append((groups, n_groups, dict(color=r["color"],
+                                           history=r["history"],
+                                           bucket=r["bucket"])))
+    return out
+
+
 def validate_schedule(resources, groups) -> bool:
     """No two samples in a group share a resource."""
     if isinstance(resources, np.ndarray):

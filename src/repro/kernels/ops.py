@@ -60,6 +60,24 @@ def _pad_v(x, v_pad, fill=0):
     return jnp.pad(x, pad, constant_values=fill)
 
 
+def _flat_call(fn, lead, v, rows: dict, tiles: dict, **kw):
+    """Flatten leading batch dims onto the row axis and call the 2-D entry.
+
+    ``rows`` — (…, V) operands (None and scalars broadcast); ``tiles`` —
+    (…, V, D) operands.  Rows of a (B, V, D) multi-graph tile land
+    contiguously on the flat row axis: the XLA twin vectorizes the flat
+    tile directly, the Pallas grid just tiles the extra rows (a per-graph
+    grid axis) — one kernel launch per batch.  Returns (…, V).
+    """
+    flat = lambda a: jnp.reshape(
+        jnp.broadcast_to(jnp.asarray(a), lead + (v,)), (-1,))
+    args = {k: (None if a is None else flat(a)) for k, a in rows.items()}
+    args.update({k: jnp.reshape(jnp.asarray(a),
+                                (-1,) + jnp.shape(a)[-1:])
+                 for k, a in tiles.items()})
+    return fn(**args, **kw).reshape(lead + (v,))
+
+
 def select_colors(nbr_colors, active, rand_u32=None, *, max_colors: int,
                   selection: str = FIRST_FIT, x: int = 10, offset=None,
                   backend: str = "auto", interpret: bool | None = None):
@@ -69,6 +87,12 @@ def select_colors(nbr_colors, active, rand_u32=None, *, max_colors: int,
     active (V,) bool-ish; rand_u32 (V,) uint32 (random_x only); offset scalar
     or (V,) int32 (staggered only).  Returns (V,) int32, 0 where inactive.
     Traceable — call it from inside jitted SPMD code.
+
+    Leading batch dims are accepted on every per-row operand — e.g. a
+    ``(B, V, MAXD)`` multi-graph tile with ``(B, V)`` masks returns
+    ``(B, V)`` colors.  Rows are flattened onto the row axis: the XLA twin
+    vectorizes the flat tile directly, and the Pallas grid simply tiles the
+    extra rows (a per-graph grid axis) — one kernel launch per batch.
     """
     if selection not in SELECTIONS:
         raise ValueError(
@@ -76,6 +100,12 @@ def select_colors(nbr_colors, active, rand_u32=None, *, max_colors: int,
     assert max_colors % 32 == 0
     backend = resolve_backend(backend)
     nbr_colors = jnp.asarray(nbr_colors)
+    if nbr_colors.ndim > 2:
+        return _flat_call(
+            select_colors, nbr_colors.shape[:-2], nbr_colors.shape[-2],
+            rows=dict(active=active, rand_u32=rand_u32, offset=offset),
+            tiles=dict(nbr_colors=nbr_colors), max_colors=max_colors,
+            selection=selection, x=x, backend=backend, interpret=interpret)
     v = nbr_colors.shape[0]
     staggered = selection == STAGGERED
     x_eff = x if selection == RANDOM_X else 0
@@ -110,10 +140,11 @@ def select_colors_d2(nbr_colors, nbr2_colors, active, rand_u32=None, *,
                      interpret: bool | None = None):
     """Distance-2 color selection over two padded neighbour tiles.
 
-    Same contract as ``select_colors`` plus ``nbr2_colors`` (V, MAXD2) int32 —
-    the strict two-hop neighbour colors. Both backends OR the one-hop and
-    two-hop forbidden bitsets before selecting, so a chosen color differs
-    from every color within graph distance 2.
+    Same contract as ``select_colors`` (leading batch dims included) plus
+    ``nbr2_colors`` (V, MAXD2) int32 — the strict two-hop neighbour colors.
+    Both backends OR the one-hop and two-hop forbidden bitsets before
+    selecting, so a chosen color differs from every color within graph
+    distance 2.
     """
     if selection not in SELECTIONS:
         raise ValueError(
@@ -122,6 +153,13 @@ def select_colors_d2(nbr_colors, nbr2_colors, active, rand_u32=None, *,
     backend = resolve_backend(backend)
     nbr_colors = jnp.asarray(nbr_colors)
     nbr2_colors = jnp.asarray(nbr2_colors)
+    if nbr_colors.ndim > 2:
+        return _flat_call(
+            select_colors_d2, nbr_colors.shape[:-2], nbr_colors.shape[-2],
+            rows=dict(active=active, rand_u32=rand_u32, offset=offset),
+            tiles=dict(nbr_colors=nbr_colors, nbr2_colors=nbr2_colors),
+            max_colors=max_colors, selection=selection, x=x,
+            backend=backend, interpret=interpret)
     v = nbr_colors.shape[0]
     staggered = selection == STAGGERED
     x_eff = x if selection == RANDOM_X else 0
@@ -155,10 +193,18 @@ def detect_conflicts(my_color, my_prio, nbr_colors, nbr_prio, active, *,
                      backend: str = "auto", interpret: bool | None = None):
     """Tile-parallel conflict detection: row loses iff a neighbour holds the
     same (nonzero) color with strictly higher priority.  Returns (V,) bool.
-    Traceable; same backend contract as ``select_colors``.
+    Traceable; same backend contract as ``select_colors``, leading batch
+    dims accepted on every operand.
     """
     backend = resolve_backend(backend)
     my_color = jnp.asarray(my_color)
+    nbr_colors = jnp.asarray(nbr_colors)
+    if nbr_colors.ndim > 2:
+        return _flat_call(
+            detect_conflicts, nbr_colors.shape[:-2], nbr_colors.shape[-2],
+            rows=dict(my_color=my_color, my_prio=my_prio, active=active),
+            tiles=dict(nbr_colors=nbr_colors, nbr_prio=nbr_prio),
+            backend=backend, interpret=interpret)
     active = jnp.asarray(active)
     if backend == "xla":
         same = (nbr_colors == my_color[:, None]) & (my_color[:, None] > 0)
@@ -180,10 +226,19 @@ def detect_conflicts_d2(my_color, my_prio, nbr_colors, nbr_prio, nbr2_colors,
                         interpret: bool | None = None):
     """Distance-2 conflict detection: row loses iff any neighbour at graph
     distance <= 2 holds the same (nonzero) color with strictly higher
-    priority. Returns (V,) bool; same backend contract as ``select_colors``.
+    priority. Returns (V,) bool; same backend contract as ``select_colors``,
+    leading batch dims accepted on every operand.
     """
     backend = resolve_backend(backend)
     my_color = jnp.asarray(my_color)
+    nbr_colors = jnp.asarray(nbr_colors)
+    if nbr_colors.ndim > 2:
+        return _flat_call(
+            detect_conflicts_d2, nbr_colors.shape[:-2], nbr_colors.shape[-2],
+            rows=dict(my_color=my_color, my_prio=my_prio, active=active),
+            tiles=dict(nbr_colors=nbr_colors, nbr_prio=nbr_prio,
+                       nbr2_colors=nbr2_colors, nbr2_prio=nbr2_prio),
+            backend=backend, interpret=interpret)
     active = jnp.asarray(active)
     if backend == "xla":
         myc, myp = my_color[:, None], jnp.asarray(my_prio)[:, None]

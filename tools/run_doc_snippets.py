@@ -1,0 +1,40 @@
+"""Execute the ```python blocks of a markdown file (docs-can't-rot CI).
+
+Every fenced ```python block runs in its own namespace, in file order.  A
+block whose fence is immediately preceded by an HTML comment containing
+``no-ci`` (e.g. ``<!-- no-ci: needs a TPU mesh -->``) is skipped — use it
+for illustrative snippets that need hardware the CI runner lacks.
+
+Usage:  PYTHONPATH=src python tools/run_doc_snippets.py README.md [...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+FENCE = re.compile(r"^(?P<skip><!--[^\n]*no-ci[^\n]*-->\s*\n)?"
+                   r"^```python[^\n]*\n(?P<body>.*?)^```\s*$",
+                   re.MULTILINE | re.DOTALL)
+
+
+def run_file(path: str) -> int:
+    text = Path(path).read_text()
+    n = 0
+    for m in FENCE.finditer(text):
+        line = text[: m.start("body")].count("\n") + 1
+        if m.group("skip"):
+            print(f"-- {path}:{line}: skipped (no-ci)")
+            continue
+        n += 1
+        print(f"== {path}:{line}: running snippet {n}")
+        exec(compile(m.group("body"), f"{path}:snippet{n}", "exec"),
+             {"__name__": f"__snippet{n}__"})
+    print(f"== {path}: {n} snippet(s) ran")
+    return n
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:] or ["README.md"]
+    total = sum(run_file(p) for p in paths)
+    assert total > 0, f"no runnable ```python blocks found in {paths}"
