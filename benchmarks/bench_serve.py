@@ -1,30 +1,37 @@
-"""Batched multi-graph dispatch vs a sequential per-graph loop (ISSUE 5).
+"""Cost-model serving vs a sequential per-graph loop (ISSUE 5 + 6).
 
 The serving workload: a *stream* of small-to-medium conflict graphs, each
 needing the fused color->recolor pipeline.  Real traffic keeps producing
 fresh graphs, and a fresh graph is a fresh XLA program under per-graph
 dispatch — its padded shapes (``maxd``, ``m_local_max``, ghost/boundary
-widths) are data-dependent, so the jit cache never converges.  The batched
-service collapses that: pow2 shape buckets (``bucket_graphs``), pow2 batch
-lanes (``color_many(pad_batch=True)``) and the shape-only all-gather
-exchange make the program set finite, so steady-state traffic runs fully
-compiled.
+widths) are data-dependent, so the jit cache never converges.  The
+``ColoringService`` collapses that: pow2 shape buckets, pow2 batch lanes,
+pow2-rung-quantized sparse comm plans and the ``PlanSignature``-keyed
+program cache make the program set finite, and the per-request cost model
+routes each request by a cache probe — compiled program → immediate solo
+dispatch, miss → shared batch-lane compile (DESIGN.md §2/§8).
 
-Protocol (both paths see the same fresh wave; First-Fit selection makes
+Protocol (both paths see the same traffic; request-id-folded RNG keys make
 their colorings identical, asserted):
 
-  - wave 0 warms both paths (every program either side will ever cache);
-  - wave 1 is fresh traffic: **sequential** = the repo's pre-batching
-    dispatch, one ``pipeline_sim`` per original graph — new shapes, new
-    compiles, every wave; **batched** = one ``color_many`` call — every
-    bucket program already cached;
-  - ``*_warm_s`` re-dispatches wave 1 verbatim (everything cached both
-    sides, interleaved min-of-N): the pure batched-vs-looped execution gap
-    on this CPU sim, reported for honesty — on CPU the compile-amortization
-    is the win; the vmap fusion itself targets TPU lanes.
+  - wave 0 is cold on both sides (compiles included in ``warmup_*_s``),
+    then ``prewarm`` compiles the service's one-lane programs;
+  - wave 1 is **fresh traffic**: sequential = one ``pipeline_sim`` per
+    graph — new data-dependent shapes, new compiles; service = cost-model
+    routing, where wave-0 signatures hit and dispatch solo and new
+    signatures share batch-lane compiles.  ``speedup`` is this leg;
+  - the **warm leg** resubmits wave 1 verbatim after a second prewarm:
+    every request takes the solo hit path (program compiled, partition
+    memoized), against the sequential loop re-run with its jit cache warm
+    (interleaved min-of-N).  ``warm_speedup`` is the cost-model fix for
+    the pre-cost-model 0.62x regression: warm same-program traffic must
+    never lose to sequential dispatch (>= 1.0x).
 
-Acceptance (ISSUE 5): >= 3x throughput (graphs/sec) on a 64-graph RMAT mix
-at P=4.  Writes BENCH_serve.json.
+Reports p50/p99 per-request latency (from the service's per-dispatch
+wall times) and the program-cache hit rate alongside throughput.
+
+Acceptance (ISSUE 6): warm_speedup >= 1.0x, fresh-traffic speedup within
+10% of the pre-cost-model batched number.  Writes BENCH_serve.json.
 """
 from __future__ import annotations
 
@@ -32,12 +39,14 @@ import json
 import time
 from pathlib import Path
 
+import jax
 import numpy as np
 
 from repro.core import (ColorConfig, PipelineConfig, RecolorConfig,
-                        assert_valid, bucket_graphs, color_many,
-                        compute_order, ordering, partition_graph,
-                        pipeline_sim, rmat)
+                        assert_valid, bucket_graphs, compute_order,
+                        ordering, partition_graph, pipeline_sim,
+                        program_cache_stats, rmat)
+from repro.launch.serve_coloring import ColoringService
 
 from .common import emit
 
@@ -57,74 +66,124 @@ def _wave(fast: bool, seed: int):
             for i in range(N_GRAPHS)]
 
 
+def _pcts(lats):
+    lats = sorted(lats)
+    return (lats[len(lats) // 2] * 1e3,
+            lats[min(len(lats) - 1, int(len(lats) * 0.99))] * 1e3)
+
+
 def run(fast: bool = True, out_path: str | Path = "BENCH_serve.json"):
     K = 8
-    # allgather: program depends on shapes only (the sparse plan's static
-    # round schedule is data-derived and would retrace per wave — see
-    # launch/serve_coloring.default_config); First Fit: identical colorings
-    # on padded and unpadded layouts, so both paths are comparable bitwise.
+    # scheme left at the default ("auto" unless $REPRO_SCHEME): each bucket
+    # picks sparse vs allgather from modeled wire bytes at trace time; the
+    # pow2-rung plans keep either choice compile-stable.  First Fit:
+    # identical colorings on padded and unpadded layouts, so the two paths
+    # are comparable bitwise.
     cfg = PipelineConfig(
-        color=ColorConfig(max_colors=MC, superstep=512, scheme="allgather"),
-        recolor=RecolorConfig(max_colors=MC, scheme="allgather"),
+        color=ColorConfig(max_colors=MC, superstep=512),
+        recolor=RecolorConfig(max_colors=MC),
         n_iters=K, base_perm="nd", seed=0)
+    svc = ColoringService(P=P, cfg=cfg)
 
-    def seq(graphs):
-        """The pre-batching server shape: per-graph partition + dispatch."""
+    def seq(graphs, ids):
+        """The pre-batching server shape: per-graph partition + dispatch,
+        same request-id-folded keys as the service (identical colorings)."""
+        ck0, rk0 = jax.random.key(cfg.color.seed), jax.random.key(cfg.seed)
         out = []
-        for g in graphs:
+        for g, i in zip(graphs, ids):
             pg = partition_graph(g, P)
             view, _ = pipeline_sim(
-                pg, compute_order(pg, ordering.INTERNAL_FIRST), cfg)
+                pg, compute_order(pg, ordering.INTERNAL_FIRST), cfg,
+                color_key=jax.random.fold_in(ck0, i),
+                recolor_key=jax.random.fold_in(rk0, i))
             out.append(pg.gather_global_colors(np.asarray(view)))
         return out
 
-    def bat(graphs):
-        """The service shape: bucket, pad, one batched program per bucket."""
-        pgs = [partition_graph(g, P) for g in graphs]
-        return [r["colors"]
-                for r in color_many(pgs, cfg, pad_batch=True)]
+    def serve(graphs):
+        """Submit + flush through the cost-model router; returns
+        (colors list in submit order, per-request latencies, route mix)."""
+        ids = [svc.submit(g) for g in graphs]
+        res = svc.flush()
+        return (ids, [res[i]["colors"] for i in ids],
+                [res[i]["latency_s"] for i in ids],
+                sum(res[i]["route"] == "solo" for i in ids))
 
     wave0, wave1 = _wave(fast, seed=0), _wave(fast, seed=1)
-    t0 = time.time(); seq(wave0); t_seq_w0 = time.time() - t0
-    t0 = time.time(); bat(wave0); t_bat_w0 = time.time() - t0
 
-    # fresh traffic: sequential compiles again (data-dependent shapes),
-    # the batched bucket programs are already cached
-    t0 = time.time(); c_seq = seq(wave1); seq_s = time.time() - t0
-    t0 = time.time(); c_bat = bat(wave1); bat_s = time.time() - t0
+    # ---- wave 0: cold, both sides; then prewarm the one-lane programs
+    t0 = time.time(); seq(wave0, range(10_000, 10_000 + N_GRAPHS))
+    t_seq_w0 = time.time() - t0
+    t0 = time.time(); serve(wave0); t_svc_w0 = time.time() - t0
+    t_prewarm = svc.prewarm(wave0)
 
-    for g, a, b in zip(wave1, c_seq, c_bat):
+    # ---- fresh traffic: the service routes by cache probe — wave-0
+    # signatures go solo, new signatures share batch-lane compiles; the
+    # sequential loop recompiles (data-dependent shapes).  The service is
+    # timed FIRST: the program cache is process-wide, so the other order
+    # would hand it the baseline's freshly compiled exact-dims programs.
+    t0 = time.time()
+    ids1, c_svc, fresh_lats, fresh_solo = serve(wave1)
+    svc_s = time.time() - t0
+    t0 = time.time()
+    c_seq = seq(wave1, range(20_000, 20_000 + N_GRAPHS))
+    seq_s = time.time() - t0
+
+    # identical results (request-id-folded keys are route-independent) —
+    # seq() must fold the same ids the service assigned
+    c_seq = seq(wave1, ids1)
+    for g, a, b in zip(wave1, c_seq, c_svc):
         assert np.array_equal(a, b), "paths disagree"
-        assert_valid(g, b, what="batched serve")
+        assert_valid(g, b, what="served coloring")
 
-    # steady-state repeat of wave 1 (everything cached both sides)
-    t_seq_w, t_bat_w = [], []
+    # ---- warm same-program leg: prewarm wave 1's new signatures, then
+    # resubmit verbatim — all-solo via the cost model — vs the warm
+    # sequential loop (interleaved min-of-REPEAT)
+    svc.prewarm(wave1)
+    t_seq_w, t_svc_w, warm_lats, warm_solo = [], [], [], 0
     for _ in range(REPEAT):
-        t0 = time.time(); seq(wave1); t_seq_w.append(time.time() - t0)
-        t0 = time.time(); bat(wave1); t_bat_w.append(time.time() - t0)
-    seq_warm_s, bat_warm_s = min(t_seq_w), min(t_bat_w)
+        ids_r = list(range(svc._next_id, svc._next_id + N_GRAPHS))
+        t0 = time.time(); seq(wave1, ids_r); t_seq_w.append(time.time() - t0)
+        t0 = time.time(); _, _, lats, solo = serve(wave1)
+        t_svc_w.append(time.time() - t0)
+        warm_lats, warm_solo = lats, solo
+    seq_warm_s, svc_warm_s = min(t_seq_w), min(t_svc_w)
 
+    st = svc.stats()
+    cache = program_cache_stats()
+    hit_rate = cache["hits"] / max(cache["hits"] + cache["misses"], 1)
+    fresh_p50, fresh_p99 = _pcts(fresh_lats)
+    warm_p50, warm_p99 = _pcts(warm_lats)
     pgs1 = [partition_graph(g, P) for g in wave1]
     rec = dict(
         n_graphs=N_GRAPHS, P=P, K=K, max_colors=MC, repeat=REPEAT,
         n_buckets=len(bucket_graphs(pgs1)),
         n_vertices=[g.n for g in wave1],
-        warmup_seq_s=t_seq_w0, warmup_batched_s=t_bat_w0,
-        seq_s=seq_s, batched_s=bat_s,
-        speedup=seq_s / max(bat_s, 1e-9),
+        warmup_seq_s=t_seq_w0, warmup_batched_s=t_svc_w0,
+        prewarm_s=t_prewarm,
+        seq_s=seq_s, batched_s=svc_s,
+        speedup=seq_s / max(svc_s, 1e-9),
         graphs_per_s_seq=N_GRAPHS / seq_s,
-        graphs_per_s_batched=N_GRAPHS / bat_s,
-        seq_warm_s=seq_warm_s, batched_warm_s=bat_warm_s,
-        warm_speedup=seq_warm_s / max(bat_warm_s, 1e-9),
+        graphs_per_s_batched=N_GRAPHS / svc_s,
+        fresh_solo=fresh_solo, fresh_p50_ms=fresh_p50, fresh_p99_ms=fresh_p99,
+        seq_warm_s=seq_warm_s, batched_warm_s=svc_warm_s,
+        warm_speedup=seq_warm_s / max(svc_warm_s, 1e-9),
+        warm_solo=warm_solo, warm_p50_ms=warm_p50, warm_p99_ms=warm_p99,
+        program_cache=dict(hits=cache["hits"], misses=cache["misses"],
+                           traces=cache["traces"], hit_rate=hit_rate),
+        routes=dict(solo=st["solo"], batch=st["batch"]),
         identical=True,
-        note="fresh-wave dispatch after warmup; sequential per-graph "
-             "dispatch recompiles on every fresh graph (data-dependent "
-             "shapes), the batched pow2-bucket programs stay cached; "
-             "*_warm_s repeats wave 1 verbatim with everything cached")
-    emit(f"serve/rmat_mix{N_GRAPHS}/P{P}/batched", bat_s * 1e6,
+        note="fresh-wave dispatch after warmup+prewarm; sequential "
+             "per-graph dispatch recompiles on every fresh graph "
+             "(data-dependent shapes), the service routes by program-cache "
+             "probe (hit -> solo dispatch, miss -> shared batch compile); "
+             "*_warm_s resubmits wave 1 verbatim, all-solo, everything "
+             "cached both sides")
+    emit(f"serve/rmat_mix{N_GRAPHS}/P{P}/batched", svc_s * 1e6,
          f"seq_us={seq_s * 1e6:.0f};x={rec['speedup']:.2f};"
          f"gps={rec['graphs_per_s_batched']:.1f};"
-         f"warm_x={rec['warm_speedup']:.2f};buckets={rec['n_buckets']}")
+         f"warm_x={rec['warm_speedup']:.2f};hit={hit_rate:.2f};"
+         f"p50={warm_p50:.1f}ms;p99={warm_p99:.1f}ms;"
+         f"buckets={rec['n_buckets']}")
     Path(out_path).write_text(json.dumps(rec, indent=1))
     return rec
 

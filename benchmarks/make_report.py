@@ -66,11 +66,13 @@ def bench_table(root: str | Path = ".") -> str:
     if r:
         rows.append((
             "serve", f"{r['n_graphs']}-graph RMAT mix P={r['P']}",
-            f"batched dispatch **{r['speedup']:.1f}x** "
+            f"cost-model serving **{r['speedup']:.1f}x** "
             f"({r['graphs_per_s_batched']:.1f} vs "
             f"{r['graphs_per_s_seq']:.1f} graphs/s) over sequential "
-            f"per-graph dispatch on fresh traffic "
-            f"({r['n_buckets']} bucket programs vs one compile per graph)"))
+            f"per-graph dispatch on fresh traffic; warm same-program "
+            f"**{r['warm_speedup']:.2f}x**, program-cache hit rate "
+            f"{r['program_cache']['hit_rate']:.2f}, warm p50/p99 "
+            f"{r['warm_p50_ms']:.0f}/{r['warm_p99_ms']:.0f} ms"))
 
     out = ["| bench | setting | headline |", "|---|---|---|"]
     out += [f"| {a} | {b} | {c} |" for a, b, c in rows]

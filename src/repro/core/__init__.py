@@ -11,6 +11,11 @@ Public API:
                                                    color→recolor pipeline
   color_many, color_many_sharded                 — batched multi-graph
                                                    pipeline (DESIGN.md §8)
+  PlanSignature, plan_signature                  — compiled-program identity
+  program_cache_stats, program_cache_clear       — process-wide program-cache
+                                                   counters (hits/misses/traces)
+  resolve_scheme                                 — trace-time sparse-vs-
+                                                   allgather decision ("auto")
   message_stats                                  — piggybacking accounting
   presets.speed / presets.quality                — the paper's parameter sets
   select_colors                                  — shared bitset color-selection
@@ -19,15 +24,20 @@ Public API:
 from repro.kernels.ops import select_colors, select_colors_d2
 
 from . import ordering, presets, rmat, selection
-from .comm import AXIS, SCHEMES, AxisComm, CommConfig, stats_to_host
+from .comm import (AUTO, AXIS, SCHEME_CHOICES, SCHEMES, AxisComm, CommConfig,
+                   allgather_bytes_per_exchange, resolve_scheme,
+                   stats_to_host)
 from .graph import (CommPlan, Graph, GraphBucket, PartitionedGraph,
                     bucket_graphs, build_comm_plan, pad_partition,
                     partition_graph)
 from .ordering import compute_order
 from .piggyback import MessageStats, message_stats
-from .pipeline import (PipelineConfig, color_many, color_many_sharded,
-                       color_then_recolor, pipeline_sharded, pipeline_sim,
-                       recolor_loop_sim)
+from .pipeline import (PipelineConfig, PlanSignature, bucket_signature,
+                       color_many, color_many_sharded, color_then_recolor,
+                       pipeline_sharded, pipeline_sim, plan_signature,
+                       program_cache_clear, program_cache_contains,
+                       program_cache_stats, recolor_loop_sim,
+                       resolve_pipeline_cfg)
 from .recolor import (ND, NI, RAND, RV, RecolorConfig, arc_sim,
                       recolor_iterations, recolor_sharded, recolor_sim,
                       schedule_for_iteration)
@@ -36,15 +46,19 @@ from .speculative import (ColorConfig, color_graph_sharded, color_graph_sim,
 from .validate import assert_valid, check_coloring, colors_from_views
 
 __all__ = [
-    "AXIS", "AxisComm", "ColorConfig", "CommConfig", "CommPlan", "Graph",
-    "GraphBucket", "MessageStats", "ND", "NI", "PartitionedGraph",
-    "PipelineConfig", "RAND", "RV", "RecolorConfig", "SCHEMES", "arc_sim",
+    "AUTO", "AXIS", "AxisComm", "ColorConfig", "CommConfig", "CommPlan",
+    "Graph", "GraphBucket", "MessageStats", "ND", "NI", "PartitionedGraph",
+    "PipelineConfig", "PlanSignature", "RAND", "RV", "RecolorConfig",
+    "SCHEME_CHOICES", "SCHEMES", "allgather_bytes_per_exchange", "arc_sim",
     "assert_valid", "bucket_graphs", "build_comm_plan", "check_coloring",
-    "color_graph_sharded", "color_graph_sim", "color_many",
-    "color_many_sharded", "color_spmd", "color_then_recolor",
+    "bucket_signature", "color_graph_sharded", "color_graph_sim",
+    "color_many", "color_many_sharded", "color_spmd", "color_then_recolor",
     "colors_from_views", "compute_order", "message_stats", "ordering",
     "pad_partition", "partition_graph", "pipeline_sharded", "pipeline_sim",
-    "presets", "recolor_iterations", "recolor_loop_sim", "recolor_sharded",
-    "recolor_sim", "rmat", "schedule_for_iteration", "select_colors",
+    "plan_signature", "presets", "program_cache_clear",
+    "program_cache_contains", "program_cache_stats", "recolor_iterations",
+    "recolor_loop_sim",
+    "recolor_sharded", "recolor_sim", "resolve_pipeline_cfg",
+    "resolve_scheme", "rmat", "schedule_for_iteration", "select_colors",
     "select_colors_d2", "selection", "stats_to_host",
 ]

@@ -42,26 +42,31 @@ AXIS = "workers"
 
 ALLGATHER = "allgather"
 SPARSE = "sparse"
-SCHEMES = (ALLGATHER, SPARSE)
+SCHEMES = (ALLGATHER, SPARSE)          # the two concrete exchange programs
+AUTO = "auto"                          # resolve at trace time from the plan
+SCHEME_CHOICES = SCHEMES + (AUTO,)
 
 # Default exchange scheme for every config that does not set one explicitly.
-# REPRO_SCHEME drives the CI matrix: the tier-1 suite runs once per scheme so
-# both exchange paths stay covered per push (colorings are bitwise-identical
-# across schemes, so goldens hold under either value).
-DEFAULT_SCHEME = os.environ.get("REPRO_SCHEME", SPARSE)
-assert DEFAULT_SCHEME in SCHEMES, (
-    f"REPRO_SCHEME={DEFAULT_SCHEME!r} invalid, want one of {SCHEMES}")
+# The default is AUTO: the drivers pick sparse vs allgather per graph at
+# trace time from the modeled bytes (``resolve_scheme``) — the two schemes
+# produce bitwise-identical colorings, so the choice is a pure cost call
+# and the user flag is an override.  REPRO_SCHEME drives the CI matrix: the
+# tier-1 suite runs once per scheme so both exchange paths (and the auto
+# resolution itself) stay covered per push.
+DEFAULT_SCHEME = os.environ.get("REPRO_SCHEME", AUTO)
+assert DEFAULT_SCHEME in SCHEME_CHOICES, (
+    f"REPRO_SCHEME={DEFAULT_SCHEME!r} invalid, want one of {SCHEME_CHOICES}")
 
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     """Static configuration of the boundary exchange."""
 
-    scheme: str = DEFAULT_SCHEME   # "allgather" | "sparse"
+    scheme: str = DEFAULT_SCHEME   # "allgather" | "sparse" | "auto"
     wire16: bool = False           # int16 payloads (half the wire bytes)
 
     def __post_init__(self):
-        assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
+        assert self.scheme in SCHEME_CHOICES, f"bad scheme {self.scheme!r}"
 
     @property
     def wire_dtype(self):
@@ -106,6 +111,26 @@ def allgather_bytes_per_exchange(P_size: int, max_boundary: int,
     home of the all-gather cost model — the sparse counterpart lives in
     ``graph.CommPlan.bytes_per_exchange``."""
     return (P_size - 1) * max_boundary * itemsize
+
+
+def resolve_scheme(scheme: str, pg) -> str:
+    """The trace-time sparse-vs-allgather decision (DESIGN.md §2).
+
+    ``scheme`` other than ``"auto"`` is a user override and returns as-is.
+    ``"auto"`` picks whichever exchange *physically ships* fewer bytes for
+    this partition: the sparse plan's padded (pow2-rung) buffer widths —
+    what the compiled ``ppermute`` rounds actually put on the wire —
+    against the ring all-gather's ``(P-1)·max_b``.  Both schemes produce
+    bitwise-identical colorings, so this is a pure cost decision; the
+    result lands in the program's ``PlanSignature``/jit key, never in user
+    config.  Ties go to sparse (fewer bytes *accounted* too, and zero
+    rounds on cross-edge-free partitions).
+    """
+    if scheme != AUTO:
+        return scheme
+    sparse_b = pg.comm_plan.bytes_per_exchange(padded=True)
+    return SPARSE if sparse_b <= allgather_bytes_per_exchange(
+        pg.P, pg.max_boundary) else ALLGATHER
 
 
 def stats_to_host(stats) -> dict:

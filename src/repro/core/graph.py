@@ -169,6 +169,15 @@ class CommPlan:
     is padded to its own global width — so both the round count and the
     bytes scale with the realized cross-edge structure, not with P.
 
+    **Shape stability** (DESIGN.md §2): the *padded* round widths
+    (``widths``, the compiled buffer shapes and hence part of every jit
+    cache key via ``static``) are quantized to pow2 rungs by default, so
+    near-sized graphs share one compiled exchange program.  The true pmax
+    payload counts survive as ``exact_widths``: padding rows are inert
+    (sentinel slots no receiver reads), and ``arrays()`` ships the exact
+    widths as *data* (``round_widths``) so measured ``wire_bytes`` stay
+    those of the exact plan — bitwise what an unquantized run reports.
+
     ``send_slot[p, r]`` lists the local boundary slots whose colors the
     round-r destination actually reads (its ghosts owned by p, in ascending
     global id), sentinel-padded to ``widths[r]`` ≤ ``max_send``.  On the
@@ -178,7 +187,8 @@ class CommPlan:
     """
 
     shifts: tuple          # static nonzero ring shifts with any traffic
-    widths: tuple          # per-shift pmax payload width
+    widths: tuple          # per-shift *padded* buffer width (pow2 rung)
+    exact_widths: tuple    # per-shift true pmax payload width (<= widths)
     max_send: int          # max(widths), the send_slot pad width
     n_send: np.ndarray     # (P, P) per-(src, dst) payload counts
     send_slot: np.ndarray  # (P, n_rounds, max_send) local slots, pad=sentinel
@@ -188,24 +198,34 @@ class CommPlan:
 
     @property
     def static(self) -> tuple:
-        """Hashable (shifts, widths) — part of the jit cache key."""
+        """Hashable (shifts, padded widths) — part of the jit cache key."""
         return (self.shifts, self.widths)
 
     def arrays(self) -> dict[str, np.ndarray]:
+        P = self.send_slot.shape[0]
+        rw = np.zeros((max(len(self.shifts), 1),), np.int32)
+        rw[:len(self.exact_widths)] = self.exact_widths
         return dict(send_slot=self.send_slot, ghost_shift=self.ghost_shift,
-                    ghost_pos=self.ghost_pos, shift_to_round=self.shift_to_round)
+                    ghost_pos=self.ghost_pos,
+                    shift_to_round=self.shift_to_round,
+                    round_widths=np.broadcast_to(rw, (P, rw.shape[0])).copy())
 
-    def bytes_per_exchange(self, itemsize: int = 4, round_mask=None) -> int:
+    def bytes_per_exchange(self, itemsize: int = 4, round_mask=None, *,
+                           padded: bool = False) -> int:
         """Per-shard wire bytes of one sparse exchange.
 
         ``round_mask`` (bool per round) models a partial exchange — the cost
         of shipping only the masked ``ppermute`` rounds (recolor's per-link
-        piggybacking); ``None`` means a full exchange.
+        piggybacking); ``None`` means a full exchange.  Default: the *exact*
+        plan bytes (the paper's model; what ``stats["wire_bytes"]``
+        measures).  ``padded=True`` counts the pow2-rung buffer widths the
+        compiled program physically ships — the quantity the trace-time
+        sparse-vs-allgather decision compares (``pipeline.resolve_scheme``).
         """
+        ws = self.widths if padded else self.exact_widths
         if round_mask is None:
-            return int(sum(self.widths)) * itemsize
-        return int(sum(w for w, m in zip(self.widths, round_mask) if m)) \
-            * itemsize
+            return int(sum(ws)) * itemsize
+        return int(sum(w for w, m in zip(ws, round_mask) if m)) * itemsize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +261,9 @@ class PartitionedGraph:
     maxd2: int = 0             # max strict-two-hop row width (halo=2 only)
     nbr2: np.ndarray | None = None  # (P, n_local_max, maxd2) two-hop ELL
                                     # slot ids, pad=sentinel (halo=2 only)
+    quantize_plan: bool = True  # pow2-rung round widths in ``comm_plan``
+                                # (compile-stable plans; byte accounting
+                                # stays exact — DESIGN.md §2)
 
     @property
     def n_slots(self) -> int:
@@ -571,12 +594,13 @@ def _union_comm_arrays(members) -> tuple[tuple, list[dict[str, np.ndarray]]]:
     The sparse exchange unrolls a *static* ``(shifts, widths)`` schedule
     (part of the jit cache key), so every graph in a batch must execute the
     same rounds.  The shared schedule is the union of the members' ring
-    shifts, each padded to the bucket-max width.  A member without traffic
-    on some shift gets an all-sentinel send row for that round (its ghosts
-    never match the shift, so the round cannot move its view) and a zero in
-    its ``round_widths`` vector — the traced byte-accounting override
-    (``comm.exchange_sparse``) that keeps each graph's measured
-    ``wire_bytes`` identical to a solo run under its own plan.
+    shifts, each padded to the bucket-max (pow2-rung) buffer width.  A
+    member without traffic on some shift gets an all-sentinel send row for
+    that round (its ghosts never match the shift, so the round cannot move
+    its view) and a zero in its ``round_widths`` vector — the traced
+    byte-accounting override (``comm.exchange_sparse``) that keeps each
+    graph's measured ``wire_bytes`` identical to a solo run under its own
+    *exact* plan.
 
     Returns ``((shifts, widths), per-member array dicts)`` where each dict
     carries ``send_slot``/``ghost_shift``/``ghost_pos``/``shift_to_round``
@@ -585,6 +609,7 @@ def _union_comm_arrays(members) -> tuple[tuple, list[dict[str, np.ndarray]]]:
     P = members[0].P
     plans = [m.comm_plan for m in members]
     width_of = [dict(zip(pl.shifts, pl.widths)) for pl in plans]
+    exact_of = [dict(zip(pl.shifts, pl.exact_widths)) for pl in plans]
     shifts = tuple(sorted({k for pl in plans for k in pl.shifts}))
     widths = tuple(max(w.get(k, 0) for w in width_of) for k in shifts)
     max_send = max(widths, default=0)
@@ -596,14 +621,14 @@ def _union_comm_arrays(members) -> tuple[tuple, list[dict[str, np.ndarray]]]:
     shift_to_round = np.broadcast_to(s2r, (P, P)).copy()
 
     out = []
-    for m, pl, w in zip(members, plans, width_of):
+    for m, pl, w, ex in zip(members, plans, width_of, exact_of):
         send = np.full((P, n_rounds, max(max_send, 1)), m.sentinel, np.int32)
         rw = np.zeros((n_rounds,), np.int32)
         for r, k in enumerate(shifts):
             if k in w:
                 rm = pl.shifts.index(k)
                 send[:, r, :pl.send_slot.shape[2]] = pl.send_slot[:, rm]
-                rw[r] = w[k]
+                rw[r] = ex[k]
         out.append(dict(
             send_slot=send, ghost_shift=pl.ghost_shift, ghost_pos=pl.ghost_pos,
             shift_to_round=shift_to_round,
@@ -651,9 +676,19 @@ class GraphBucket:
         return out
 
     def stacked_arrays(self, *, sparse: bool = True) -> dict[str, np.ndarray]:
-        """All members stacked on a leading graph axis: ``(B, P, ...)``."""
-        per = [self.member_arrays(j, sparse=sparse) for j in range(self.B)]
-        return {k: np.stack([d[k] for d in per]) for k in per[0]}
+        """All members stacked on a leading graph axis: ``(B, P, ...)``.
+
+        Cached per ``sparse`` flag: a memoized serving bucket re-dispatches
+        the same stacked inputs on every warm solo hit, so the stack copy
+        must not be a per-request cost.
+        """
+        cache = self.__dict__.setdefault("_stacked", {})
+        if sparse not in cache:
+            per = [self.member_arrays(j, sparse=sparse)
+                   for j in range(self.B)]
+            cache[sparse] = {k: np.stack([d[k] for d in per])
+                             for k in per[0]}
+        return cache[sparse]
 
 
 def _ceil_pow2(x: int) -> int:
@@ -699,7 +734,8 @@ def bucket_graphs(pgs, *, round_pow2: bool = True) -> list:
     return buckets
 
 
-def build_comm_plan(pg: PartitionedGraph) -> CommPlan:
+def build_comm_plan(pg: PartitionedGraph, *,
+                    quantize: bool | None = None) -> CommPlan:
     """Derive the sparse neighbour-to-neighbour schedule from the ghosts.
 
     Shard q's ghosts are sorted by global vertex id, and block partitioning
@@ -708,6 +744,13 @@ def build_comm_plan(pg: PartitionedGraph) -> CommPlan:
     (the boundary colors q actually reads), and the position of each ghost
     inside its run is the receive-side gather index.  Both sides are derived
     from the same pass, so they agree by construction.
+
+    ``quantize`` (default ``pg.quantize_plan``, i.e. on) rounds every
+    round's *buffer* width up to the next power of two so the plan's static
+    part — the jit cache key — takes few distinct values across graphs of
+    similar structure (DESIGN.md §2).  The padding entries are sentinel
+    slots no receiver ever reads, and byte accounting keeps using the exact
+    widths, so a quantized run is bitwise an exact-plan run.
     """
     P = pg.P
     n_send = np.zeros((P, P), dtype=np.int32)
@@ -732,13 +775,17 @@ def build_comm_plan(pg: PartitionedGraph) -> CommPlan:
             ghost_shift[q, s:e] = (q - p) % P
 
     # retain only ring shifts with any traffic; each round pads to its own
-    # global (pmax) width
+    # global (pmax) width, pow2-rung-rounded when the plan is quantized
     srcs, dsts = np.nonzero(n_send)
     all_shifts = (dsts - srcs) % P
     shifts = tuple(int(k) for k in np.unique(all_shifts))
-    widths = tuple(
+    exact_widths = tuple(
         int(n_send[np.arange(P), (np.arange(P) + k) % P].max())
         for k in shifts)
+    if quantize is None:
+        quantize = pg.quantize_plan
+    widths = (tuple(_ceil_pow2(w) for w in exact_widths) if quantize
+              else exact_widths)
     max_send = max(widths, default=0)
 
     send_slot = np.full((P, max(len(shifts), 1), max(max_send, 1)),
@@ -755,7 +802,8 @@ def build_comm_plan(pg: PartitionedGraph) -> CommPlan:
         shift_to_round[k] = r
 
     return CommPlan(
-        shifts=shifts, widths=widths, max_send=max_send, n_send=n_send,
+        shifts=shifts, widths=widths, exact_widths=exact_widths,
+        max_send=max_send, n_send=n_send,
         send_slot=send_slot, ghost_shift=ghost_shift, ghost_pos=ghost_pos,
         shift_to_round=np.broadcast_to(shift_to_round, (P, P)).copy(),
     )

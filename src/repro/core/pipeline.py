@@ -49,20 +49,23 @@ exchange schemes, distance 1 and 2).
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache, partial
+from collections import OrderedDict
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import ordering
-from .comm import SPARSE, AxisComm, run_sharded, run_sim, stats_to_host
+from .comm import (ALLGATHER, AUTO, SPARSE, AxisComm,
+                   allgather_bytes_per_exchange, run_sharded, run_sim,
+                   stats_to_host)
 from .graph import PartitionedGraph, _ceil_pow2, bucket_graphs
 from .ordering import compute_order
 from .recolor import (ALL_PERMS, ND, PERM_IDS, RecolorConfig, class_sizes,
                       permutation_rank, permutation_rank_traced,
                       recolor_pass_spmd, schedule_for_iteration)
-from .speculative import ColorConfig, _apply_partial, color_spmd
+from .speculative import ColorConfig, _apply_partial, color_spmd, resolve_cfg
 
 # Column layout of the device-resident per-iteration history.  ``ran`` marks
 # rows the adaptive stop never reached (they stay zero).
@@ -111,7 +114,16 @@ class PipelineConfig:
             for it in range(1, self.n_iters + 1))
 
     @property
+    def has_auto(self) -> bool:
+        """True while any stage's scheme is still the unresolved "auto"."""
+        return (self.recolor.scheme == AUTO
+                or (self.color is not None and self.color.scheme == AUTO))
+
+    @property
     def needs_sparse_plan(self) -> bool:
+        assert not self.has_auto, (
+            "scheme='auto' must be resolved against a partition first "
+            "(resolve_pipeline_cfg)")
         return (self.recolor.scheme == SPARSE
                 or (self.color is not None and self.color.scheme == SPARSE))
 
@@ -237,16 +249,220 @@ def _plan_static(pg: PartitionedGraph, cfg: PipelineConfig):
 
 
 def _pipeline_arrays(pg: PartitionedGraph, cfg: PipelineConfig) -> dict:
-    return {k: jnp.asarray(v)
-            for k, v in pg.arrays(sparse=cfg.needs_sparse_plan).items()}
+    """Device-resident input dict, cached on the partition instance.
+
+    JAX arrays are immutable, so the same device buffers serve every
+    dispatch of this partition — a memoized serving entry pays the
+    host->device transfer once, not per warm request.
+    """
+    cache = pg.__dict__.setdefault("_device_arrays", {})
+    sparse = cfg.needs_sparse_plan
+    if sparse not in cache:
+        cache[sparse] = {k: jnp.asarray(v)
+                         for k, v in pg.arrays(sparse=sparse).items()}
+    return cache[sparse]
 
 
-@lru_cache(maxsize=64)
-def _loop_sim_fn(P, cfg, plan_static):
-    fn = partial(recolor_loop_spmd, cfg=cfg, P_size=P,
-                 plan_static=plan_static)
-    return jax.jit(
-        lambda arrs, view, key: run_sim(fn, P, (arrs, view), (key,)))
+# ------------------------------------------------- compiled-program cache --
+
+@dataclasses.dataclass(frozen=True)
+class PlanSignature:
+    """Hashable identity of one compiled pipeline program (DESIGN.md §2).
+
+    Two dispatches with equal signatures share one lowered program.  The
+    named fields are the readable core (``launch/dryrun.py`` prints them):
+    ``rungs`` is the comm plan's static ``(shifts, pow2 widths)`` — the
+    part width quantization exists to stabilize — and ``scheme`` is the
+    *resolved* exchange scheme (never "auto").  ``dims`` pins every input
+    array's ``(name, shape, dtype)`` so signature equality is exactly as
+    strict as the jit trace, and ``cfg`` carries the full static config;
+    ``extra`` holds non-array trace context (the mesh, for sharded
+    programs).
+    """
+
+    kind: str          # program family: pipe_sim | loop_sim | pipe_sharded
+                       # | many_sim | many_sharded
+    P: int
+    n_local_max: int
+    maxd: int
+    max_colors: int
+    distance: int
+    scheme: str        # resolved: "sparse" | "allgather"
+    rungs: tuple       # plan static (shifts, pow2 widths); () for allgather
+    batch: int         # vmapped graph lanes (0 = solo program)
+    cfg: object        # resolved PipelineConfig (trace-static)
+    dims: tuple        # ((name, shape, dtype), ...) of every input array
+    extra: object = None
+
+    def describe(self) -> str:
+        """The human-readable core (what ``dryrun --coloring`` reports)."""
+        return (f"kind={self.kind} P={self.P} "
+                f"n_local_max={self.n_local_max} maxd={self.maxd} "
+                f"max_colors={self.max_colors} distance={self.distance} "
+                f"scheme={self.scheme} batch={self.batch} "
+                f"rungs={self.rungs[1] if self.rungs else ()}")
+
+
+class _ProgramCache:
+    """Process-wide LRU of jitted pipeline programs keyed on PlanSignature.
+
+    ``hits``/``misses`` count signature lookups; ``traces`` counts actual
+    XLA traces (a Python side effect inside each jitted wrapper, executed
+    once per trace) — the regression tests pin ``traces`` so a silently
+    widened cache key can't reintroduce retrace-per-graph dispatch.
+    """
+
+    def __init__(self, maxsize: int = 128):
+        self._fns: OrderedDict = OrderedDict()
+        self.maxsize = maxsize
+        self.hits = self.misses = self.traces = 0
+
+    def get(self, sig: PlanSignature, build):
+        fn = self._fns.get(sig)
+        if fn is not None:
+            self._fns.move_to_end(sig)
+            self.hits += 1
+            return fn
+        self.misses += 1
+        fn = build()
+        self._fns[sig] = fn
+        while len(self._fns) > self.maxsize:
+            self._fns.popitem(last=False)
+        return fn
+
+    def clear(self):
+        self._fns.clear()
+        self.hits = self.misses = self.traces = 0
+
+
+_PROGRAMS = _ProgramCache()
+
+
+def program_cache_stats() -> dict:
+    """Snapshot of the process-wide program cache counters."""
+    return dict(hits=_PROGRAMS.hits, misses=_PROGRAMS.misses,
+                traces=_PROGRAMS.traces, size=len(_PROGRAMS._fns))
+
+
+def program_cache_clear() -> None:
+    """Drop every cached program and zero the counters (tests/benchmarks)."""
+    _PROGRAMS.clear()
+
+
+def _count_traces(fn):
+    """Increment the trace counter when (and only when) XLA traces ``fn``."""
+    def wrapped(*args):
+        _PROGRAMS.traces += 1
+        return fn(*args)
+    return wrapped
+
+
+def _dims_of(arrs) -> tuple:
+    return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                        for k, v in arrs.items()))
+
+
+def _signature(kind: str, P: int, cfg: PipelineConfig, plan_static, arrs,
+               batch: int = 0, extra=None) -> PlanSignature:
+    mc = (cfg.color.max_colors if cfg.color is not None
+          else cfg.recolor.max_colors)
+    return PlanSignature(
+        kind=kind, P=P, n_local_max=int(arrs["indptr"].shape[-1]) - 1,
+        maxd=int(arrs["nbr"].shape[-1]), max_colors=mc,
+        distance=cfg.recolor.distance, scheme=cfg.recolor.scheme,
+        rungs=plan_static if plan_static is not None else (),
+        batch=batch, cfg=cfg, dims=_dims_of(arrs), extra=extra)
+
+
+def resolve_pipeline_cfg(pg: PartitionedGraph,
+                         cfg: PipelineConfig) -> PipelineConfig:
+    """Concretize any ``scheme="auto"`` stage against ``pg``'s comm plan.
+
+    The decision (``comm.resolve_scheme``) compares the *padded* sparse
+    plan bytes — what the compiled program physically ships — against the
+    broadcast's; an explicit scheme passes through untouched.
+    """
+    if not cfg.has_auto:
+        return cfg
+    return dataclasses.replace(
+        cfg, color=None if cfg.color is None else resolve_cfg(pg, cfg.color),
+        recolor=resolve_cfg(pg, cfg.recolor))
+
+
+def plan_signature(pg: PartitionedGraph, cfg: PipelineConfig, *,
+                   kind: str | None = None, batch: int = 0,
+                   mesh=None) -> PlanSignature:
+    """The signature a ``pipeline_sim``-family dispatch of ``pg`` would use.
+
+    Public inspection hook (``launch/dryrun.py``, the serving cost model,
+    tests): resolves "auto", builds the device dict host-side and derives
+    the exact cache key without compiling anything.  ``mesh`` selects the
+    ``pipeline_sharded`` program (``kind`` defaults accordingly).
+    """
+    if kind is None:
+        kind = "pipe_sim" if mesh is None else "pipe_sharded"
+    cfg = resolve_pipeline_cfg(pg, cfg)
+    arrs = pg.arrays(sparse=cfg.needs_sparse_plan)
+    return _signature(kind, pg.P, cfg, _plan_static(pg, cfg), arrs,
+                      batch=batch, extra=mesh)
+
+
+def program_cache_contains(sig: PlanSignature) -> bool:
+    """Cache-probe for the serving cost model — no counter side effects."""
+    return sig in _PROGRAMS._fns
+
+
+def bucket_signature(bucket, cfg: PipelineConfig, *, pad_batch: bool = True,
+                     mesh=None) -> PlanSignature:
+    """The signature a ``color_many``(`_sharded``) dispatch of ``bucket``
+    would use.
+
+    The serving driver's cost model probes the program cache with this
+    before deciding solo-vs-batch routing; nothing is stacked or compiled —
+    batch padding and the sharded layout's axis swap are applied to shapes
+    only.
+    """
+    bcfg = _resolve_bucket_cfg(bucket, cfg)
+    ma = bucket.member_arrays(0, sparse=bcfg.needs_sparse_plan)
+    B = _ceil_pow2(bucket.B) if pad_batch else bucket.B
+
+    def dim(v):
+        s = (B,) + tuple(v.shape)
+        return (s[1], s[0]) + s[2:] if mesh is not None else s
+
+    dims = tuple(sorted((k, dim(v), str(np.asarray(v).dtype))
+                        for k, v in ma.items()))
+    ps = bucket.plan_static if bcfg.needs_sparse_plan else None
+    mc = (bcfg.color.max_colors if bcfg.color is not None
+          else bcfg.recolor.max_colors)
+    return PlanSignature(
+        kind="many_sim" if mesh is None else "many_sharded", P=bucket.P,
+        n_local_max=bucket.members[0].n_local_max,
+        maxd=bucket.members[0].maxd, max_colors=mc,
+        distance=bcfg.recolor.distance, scheme=bcfg.recolor.scheme,
+        rungs=ps if ps is not None else (), batch=B, cfg=bcfg, dims=dims,
+        extra=mesh)
+
+
+def _bucket_scheme(bucket) -> str:
+    """Trace-time sparse-vs-allgather pick for one bucket (union plan)."""
+    sparse_b = sum(bucket.plan_static[1]) * 4
+    ag_b = allgather_bytes_per_exchange(bucket.P,
+                                        bucket.members[0].max_boundary)
+    return SPARSE if sparse_b <= ag_b else ALLGATHER
+
+
+def _resolve_bucket_cfg(bucket, cfg: PipelineConfig) -> PipelineConfig:
+    """Per-bucket "auto" resolution: members share one compiled program, so
+    the decision is made once from the union plan's padded bytes."""
+    if not cfg.has_auto:
+        return cfg
+    scheme = _bucket_scheme(bucket)
+    fix = lambda c: (None if c is None else
+                     dataclasses.replace(c, scheme=scheme)
+                     if c.scheme == AUTO else c)
+    return dataclasses.replace(cfg, color=fix(cfg.color),
+                               recolor=fix(cfg.recolor))
 
 
 def recolor_loop_sim(pg: PartitionedGraph, view, cfg: PipelineConfig,
@@ -255,20 +471,21 @@ def recolor_loop_sim(pg: PartitionedGraph, view, cfg: PipelineConfig,
 
     Returns ``(view, history list-of-dicts, n_iters_run)``.
     """
+    cfg = resolve_pipeline_cfg(pg, cfg)
     arrs = _pipeline_arrays(pg, cfg)
     if key is None:
         key = jax.random.key(cfg.seed)
-    view, hist, n_run = _loop_sim_fn(pg.P, cfg, _plan_static(pg, cfg))(
-        arrs, jnp.asarray(view), key)
+    ps = _plan_static(pg, cfg)
+    sig = _signature("loop_sim", pg.P, cfg, ps, arrs)
+
+    def build(P=pg.P):
+        fn = partial(recolor_loop_spmd, cfg=cfg, P_size=P, plan_static=ps)
+        return jax.jit(_count_traces(
+            lambda arrs, view, key: run_sim(fn, P, (arrs, view), (key,))))
+
+    view, hist, n_run = _PROGRAMS.get(sig, build)(arrs, jnp.asarray(view),
+                                                  key)
     return view, _history_to_host(hist), int(np.max(np.asarray(n_run)))
-
-
-@lru_cache(maxsize=64)
-def _pipe_sim_fn(P, cfg, plan_static):
-    fn = partial(color_then_recolor, cfg=cfg, P_size=P,
-                 plan_static=plan_static)
-    return jax.jit(lambda arrs, order, ck, rk: run_sim(
-        fn, P, (arrs, order), (ck, rk)))
 
 
 def _keys(cfg: PipelineConfig, color_key, recolor_key):
@@ -300,11 +517,20 @@ def pipeline_sim(pg: PartitionedGraph, order, cfg: PipelineConfig, *,
     bitwise-identical ``workers``-mesh variant.
     """
     assert cfg.color is not None, "pipeline_sim needs cfg.color"
+    cfg = resolve_pipeline_cfg(pg, cfg)
     arrs = _pipeline_arrays(pg, cfg)
     order = _apply_partial(order, cfg.color, marked)
     ck, rk = _keys(cfg, color_key, recolor_key)
-    out = _pipe_sim_fn(pg.P, cfg, _plan_static(pg, cfg))(
-        arrs, jnp.asarray(order), ck, rk)
+    ps = _plan_static(pg, cfg)
+    sig = _signature("pipe_sim", pg.P, cfg, ps, arrs)
+
+    def build(P=pg.P):
+        fn = partial(color_then_recolor, cfg=cfg, P_size=P, plan_static=ps)
+        return jax.jit(_count_traces(
+            lambda arrs, order, ck, rk: run_sim(fn, P, (arrs, order),
+                                                (ck, rk))))
+
+    out = _PROGRAMS.get(sig, build)(arrs, jnp.asarray(order), ck, rk)
     return _pipeline_result(*out)
 
 
@@ -312,39 +538,46 @@ def pipeline_sharded(pg: PartitionedGraph, order, cfg: PipelineConfig, mesh,
                      *, marked=None, color_key=None, recolor_key=None):
     """Run the fused pipeline on a real mesh axis ``workers`` (shard_map)."""
     assert cfg.color is not None, "pipeline_sharded needs cfg.color"
+    cfg = resolve_pipeline_cfg(pg, cfg)
     arrs = _pipeline_arrays(pg, cfg)
     order = _apply_partial(order, cfg.color, marked)
     ck, rk = _keys(cfg, color_key, recolor_key)
-    fn = partial(color_then_recolor, cfg=cfg, P_size=pg.P,
-                 plan_static=_plan_static(pg, cfg))
-    out = jax.jit(
-        lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2)))(
-            arrs, jnp.asarray(order), ck, rk)
+    ps = _plan_static(pg, cfg)
+    sig = _signature("pipe_sharded", pg.P, cfg, ps, arrs, extra=mesh)
+
+    def build(P=pg.P):
+        fn = partial(color_then_recolor, cfg=cfg, P_size=P, plan_static=ps)
+        return jax.jit(_count_traces(
+            lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2))))
+
+    out = _PROGRAMS.get(sig, build)(arrs, jnp.asarray(order), ck, rk)
     return _pipeline_result(*out)
 
 
 # ------------------------------------------- batched multi-graph pipeline --
 
-@lru_cache(maxsize=64)
-def _many_sim_fn(P, cfg, plan_static):
-    """One jitted program per (P, config, shared plan): vmap over graphs of
-    vmap over shards — retraced per batch shape, cached across batches."""
-    fn = partial(color_then_recolor, cfg=cfg, P_size=P,
-                 plan_static=plan_static)
-    inner = lambda arrs, order, ck, rk: run_sim(fn, P, (arrs, order),
-                                                (ck, rk))
-    return jax.jit(jax.vmap(inner))
+def _many_sim_program(sig, P, cfg, plan_static):
+    """One jitted program per signature: vmap over graphs of vmap over
+    shards — reused across batches (and graphs) through ``_PROGRAMS``."""
+    def build():
+        fn = partial(color_then_recolor, cfg=cfg, P_size=P,
+                     plan_static=plan_static)
+        inner = lambda arrs, order, ck, rk: run_sim(fn, P, (arrs, order),
+                                                    (ck, rk))
+        return jax.jit(_count_traces(jax.vmap(inner)))
+    return _PROGRAMS.get(sig, build)
 
 
-@lru_cache(maxsize=64)
-def _many_sharded_fn(P, cfg, plan_static, mesh):
-    """Cached mesh dispatch per (P, config, plan, mesh) — without it every
-    flush would rebuild the vmap/jit wrappers and recompile, defeating the
-    pow2 shape bucketing the serving path relies on."""
-    fn = jax.vmap(partial(color_then_recolor, cfg=cfg, P_size=P,
-                          plan_static=plan_static))
-    return jax.jit(
-        lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2)))
+def _many_sharded_program(sig, P, cfg, plan_static, mesh):
+    """Cached mesh dispatch — without it every flush would rebuild the
+    vmap/jit wrappers and recompile, defeating the pow2 shape bucketing
+    the serving path relies on."""
+    def build():
+        fn = jax.vmap(partial(color_then_recolor, cfg=cfg, P_size=P,
+                              plan_static=plan_static))
+        return jax.jit(_count_traces(
+            lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2))))
+    return _PROGRAMS.get(sig, build)
 
 
 def _keys_many(cfg: PipelineConfig, n, color_keys, recolor_keys):
@@ -368,7 +601,16 @@ def _bucket_order(bucket, cfg: PipelineConfig, orders, marked):
     identical to padding the original's order, local slots are unchanged)
     or a per-graph sequence of ``(P, n_local_max)`` arrays padded here with
     -1 to the bucket width.  ``marked`` masks are padded with False.
+
+    Kind-string orders with no ``marked`` masks are cached on the bucket:
+    a memoized serving bucket must not recompute orders per warm request.
     """
+    cache = key = None
+    if marked is None and (orders is None or isinstance(orders, str)):
+        key = (orders, cfg.color)
+        cache = bucket.__dict__.setdefault("_order_cache", {})
+        if key in cache:
+            return cache[key]
     rows = []
     for j, gi in enumerate(bucket.indices):
         m = bucket.members[j]
@@ -383,7 +625,10 @@ def _bucket_order(bucket, cfg: PipelineConfig, orders, marked):
             mk = np.asarray(mk, dtype=bool)
             mk = np.pad(mk, ((0, 0), (0, m.n_local_max - mk.shape[1])))
         rows.append(_apply_partial(o, cfg.color, mk))
-    return np.stack(rows)
+    out = np.stack(rows)
+    if cache is not None:
+        cache[key] = out
+    return out
 
 
 def _pad_batch_lanes(st, order_b, cks_b, rks_b, B):
@@ -468,9 +713,12 @@ def color_many(pgs, cfg: PipelineConfig, *, orders=None, marked=None,
     cks, rks = _keys_many(cfg, len(pgs), color_keys, recolor_keys)
     results = [None] * len(pgs)
     for bi, bucket in enumerate(buckets):
+        bcfg = _resolve_bucket_cfg(bucket, cfg)
         st, order_b, cks_b, rks_b, ps = _bucket_inputs(
-            bucket, cfg, orders, marked, cks, rks, pad_batch)
-        out = _many_sim_fn(bucket.P, cfg, ps)(
+            bucket, bcfg, orders, marked, cks, rks, pad_batch)
+        sig = _signature("many_sim", bucket.P, bcfg, ps, st,
+                         batch=len(cks_b))
+        out = _many_sim_program(sig, bucket.P, bcfg, ps)(
             {k: jnp.asarray(v) for k, v in st.items()},
             jnp.asarray(order_b), jnp.stack(cks_b), jnp.stack(rks_b))
         _unpack_bucket(out, bucket, bi, pgs, results)
@@ -491,12 +739,15 @@ def color_many_sharded(pgs, cfg: PipelineConfig, mesh, *, orders=None,
     cks, rks = _keys_many(cfg, len(pgs), color_keys, recolor_keys)
     results = [None] * len(pgs)
     for bi, bucket in enumerate(buckets):
+        bcfg = _resolve_bucket_cfg(bucket, cfg)
         st, order_b, cks_b, rks_b, ps = _bucket_inputs(
-            bucket, cfg, orders, marked, cks, rks, pad_batch)
+            bucket, bcfg, orders, marked, cks, rks, pad_batch)
         # leading axis P for shard_map; per-shard arrays carry (B, ...)
         arrs = {k: jnp.moveaxis(jnp.asarray(v), 0, 1) for k, v in st.items()}
         order_b = jnp.moveaxis(jnp.asarray(order_b), 0, 1)
-        out = _many_sharded_fn(bucket.P, cfg, ps, mesh)(
+        sig = _signature("many_sharded", bucket.P, bcfg, ps, arrs,
+                         batch=len(cks_b), extra=mesh)
+        out = _many_sharded_program(sig, bucket.P, bcfg, ps, mesh)(
             arrs, order_b, jnp.stack(cks_b), jnp.stack(rks_b))
         # outputs carry (P, B, ...): put the graph axis back in front
         out = jax.tree.map(lambda x: np.moveaxis(np.asarray(x), 0, 1), out)

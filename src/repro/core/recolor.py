@@ -60,12 +60,12 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
-from .comm import (AXIS, DEFAULT_SCHEME, SCHEMES, SPARSE, AxisComm,
-                   CommConfig, exchange_boundary, make_exchange, run_sharded,
-                   run_sim, stats_to_host)
+from .comm import (AUTO, AXIS, DEFAULT_SCHEME, SCHEME_CHOICES, SCHEMES,
+                   SPARSE, AxisComm, CommConfig, exchange_boundary,
+                   make_exchange, run_sharded, run_sim, stats_to_host)
 from .graph import PartitionedGraph
 from .speculative import (ColorConfig, _compact_order, _plan_static,
-                          color_spmd, validate_color_bounds)
+                          color_spmd, resolve_cfg, validate_color_bounds)
 
 RV = "rv"
 NI = "ni"
@@ -102,7 +102,8 @@ class RecolorConfig:
     max_colors: int = 1024         # bound on colors of the SEED coloring
     piggyback: bool = True         # paper §3.1 (False = exchange every step)
     scheme: str = DEFAULT_SCHEME   # boundary exchange: "sparse" | "allgather"
-                                   # (default follows $REPRO_SCHEME, see comm)
+                                   # | "auto" (pick by modeled bytes at trace
+                                   # time; default follows $REPRO_SCHEME)
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
     chunk: int = 256               # vertices selected per chunk (ELL tile rows)
     backend: str = "auto"          # kernels.ops backend: auto | xla | pallas
@@ -114,7 +115,7 @@ class RecolorConfig:
 
     def __post_init__(self):
         validate_color_bounds(self.max_colors, self.wire16, self.backend)
-        assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
+        assert self.scheme in SCHEME_CHOICES, f"bad scheme {self.scheme!r}"
         assert self.chunk > 0
         assert self.distance in (1, 2), f"bad distance {self.distance}"
 
@@ -312,6 +313,9 @@ def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
     # range would gather pure padding every class step, which dominates the
     # runtime of small graphs (and of every lane of the batched pipeline).
     chunk = min(cfg.chunk, n_local_max)
+    if cfg.scheme == AUTO:
+        raise ValueError("scheme='auto' must be resolved by a driver "
+                         "(resolve_cfg / resolve_scheme) before the SPMD fn")
     sparse = cfg.scheme == SPARSE
     if sparse and (P_size is None or plan_static is None):
         raise ValueError("sparse scheme needs P_size and plan_static "
@@ -486,6 +490,7 @@ def recolor_sim(pg: PartitionedGraph, view, perm_kind: str,
     count), ``wire_bytes``, ``n_out_of_range``.  ``recolor_sharded`` is
     the bitwise-identical ``workers``-mesh variant.
     """
+    cfg = resolve_cfg(pg, cfg)
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
@@ -510,6 +515,7 @@ def arc_sim(pg: PartitionedGraph, view, perm_kind: str, rc_cfg: RecolorConfig,
     stats as ``color_graph_sim``; the key splits into independent rank and
     repair streams.
     """
+    rc_cfg, sp_cfg = resolve_cfg(pg, rc_cfg), resolve_cfg(pg, sp_cfg)
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=sp_cfg.scheme == SPARSE).items()}
     if key is None:
@@ -524,6 +530,7 @@ def recolor_sharded(pg: PartitionedGraph, view, perm_kind: str,
                     cfg: RecolorConfig, mesh, key=None):
     """``recolor_sim`` on a real mesh axis ``workers`` (same contract,
     bitwise-identical results)."""
+    cfg = resolve_cfg(pg, cfg)
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:

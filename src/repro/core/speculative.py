@@ -71,9 +71,9 @@ import numpy as np
 from repro.kernels import ops
 
 from . import selection as sel
-from .comm import (AXIS, DEFAULT_SCHEME, SCHEMES, SPARSE, AxisComm,
-                   CommConfig, make_exchange, run_sharded, run_sim,
-                   stats_to_host)
+from .comm import (AUTO, AXIS, DEFAULT_SCHEME, SCHEME_CHOICES, SCHEMES,
+                   SPARSE, AxisComm, CommConfig, make_exchange, resolve_scheme,
+                   run_sharded, run_sim, stats_to_host)
 from .graph import PartitionedGraph
 
 
@@ -111,7 +111,8 @@ class ColorConfig:
     exchange_every: int = 1        # 1 = synchronous; k>1 = bounded staleness
     max_rounds: int = 64
     scheme: str = DEFAULT_SCHEME   # boundary exchange: "sparse" | "allgather"
-                                   # (default follows $REPRO_SCHEME, see comm)
+                                   # | "auto" (pick by modeled bytes at trace
+                                   # time; default follows $REPRO_SCHEME)
     wire16: bool = False           # int16 boundary payloads (half ICI bytes)
     parallel_chunk: bool = True    # tile-parallel supersteps (False = paper's
                                    # sequential scalar loop, bitwise-preserved)
@@ -128,7 +129,7 @@ class ColorConfig:
 
     def __post_init__(self):
         validate_color_bounds(self.max_colors, self.wire16, self.backend)
-        assert self.scheme in SCHEMES, f"bad scheme {self.scheme!r}"
+        assert self.scheme in SCHEME_CHOICES, f"bad scheme {self.scheme!r}"
         assert self.tile > 0
         assert self.distance in (1, 2), f"bad distance {self.distance}"
 
@@ -325,6 +326,9 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
     n_local_max = arrs["indptr"].shape[0] - 1
     n_slots = arrs["prio"].shape[0]
     p_idx = comm.index()
+    if cfg.scheme == AUTO:
+        raise ValueError("scheme='auto' must be resolved by a driver "
+                         "(resolve_cfg / resolve_scheme) before the SPMD fn")
     if cfg.scheme == SPARSE and (P_size is None or plan_static is None):
         raise ValueError("sparse scheme needs P_size and plan_static "
                          "(see PartitionedGraph.comm_plan)")
@@ -436,6 +440,20 @@ def _plan_static(pg: PartitionedGraph, cfg) -> tuple | None:
     return pg.comm_plan.static if cfg.scheme == SPARSE else None
 
 
+def resolve_cfg(pg: PartitionedGraph, cfg):
+    """Concretize ``scheme="auto"`` against this partition's comm plan.
+
+    Works on any frozen config dataclass with a ``scheme`` field
+    (ColorConfig / RecolorConfig / PipelineConfig).  The decision is made
+    from modeled bytes at trace time (``comm.resolve_scheme``); an explicit
+    "sparse"/"allgather" passes through untouched, so the flag stays a
+    user override.
+    """
+    if cfg.scheme == AUTO:
+        cfg = dataclasses.replace(cfg, scheme=resolve_scheme(AUTO, pg))
+    return cfg
+
+
 def _apply_partial(order, cfg: ColorConfig, marked):
     """Mask the visit order down to the marked subset (``cfg.partial``).
 
@@ -470,6 +488,7 @@ def color_graph_sim(pg: PartitionedGraph, order, cfg: ColorConfig,
     ``n_exchanges``, ``wire_bytes`` (measured, per-shard max).
     ``color_graph_sharded`` is the bitwise-identical mesh variant.
     """
+    cfg = resolve_cfg(pg, cfg)
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
@@ -485,6 +504,7 @@ def color_graph_sharded(pg: PartitionedGraph, order, cfg: ColorConfig, mesh,
     """Run distributed coloring on a real mesh axis ``workers``
     (shard_map); same contract and bitwise the same results as
     ``color_graph_sim``."""
+    cfg = resolve_cfg(pg, cfg)
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:

@@ -176,9 +176,27 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
         sparse_rec = dict(
             n_rounds=len(plan.shifts),
             modeled_bytes_per_exchange=plan.bytes_per_exchange(),
+            padded_bytes_per_exchange=plan.bytes_per_exchange(padded=True),
             allgather_modeled_bytes_per_exchange=allgather_bytes_per_exchange(
                 P, pg.max_boundary),
         )
+        # the trace-time scheme decision + the compiled-program identity the
+        # modeled byte gap is attributable to (DESIGN.md §2)
+        from repro.core import plan_signature, resolve_scheme
+        from repro.core.pipeline import PipelineConfig as _PCfg
+        decision = resolve_scheme("auto", pg)
+        sig = plan_signature(pg, _PCfg(
+            color=ColorConfig(max_colors=256, superstep=64, scheme="auto"),
+            recolor=RecolorConfig(max_colors=256, scheme="auto"),
+            n_iters=4, patience=2))
+        sparse_rec["scheme_decision"] = decision
+        sparse_rec["plan_signature"] = sig.describe()
+        print(f"[coloring P={P}] plan signature: {sig.describe()}")
+        print(f"[coloring P={P}] trace-time scheme decision: {decision} "
+              f"(sparse padded "
+              f"{sparse_rec['padded_bytes_per_exchange']}B vs allgather "
+              f"{sparse_rec['allgather_modeled_bytes_per_exchange']}B "
+              f"per exchange)")
         if len(plan.shifts) <= 64:
             rfs = partial(recolor_spmd, perm_kind="nd",
                           cfg=RecolorConfig(max_colors=256, scheme="sparse"),

@@ -5,9 +5,26 @@ class runs concurrently.  In production that workload arrives as *many*
 small-to-medium graphs (per-batch conflict graphs, per-tile Jacobian
 sparsity patterns), not one giant one — so the serving shape is a queue:
 accept graphs, bucket them by padded shape (``core.bucket_graphs``),
-dispatch each bucket through ONE fused batched program
-(``core.color_many`` / ``color_many_sharded``, DESIGN.md §8), and return
-per-request colorings + stats.
+dispatch through the compiled-program cache (``core.pipeline``,
+DESIGN.md §2/§8), and return per-request colorings + stats.
+
+Routing is a per-request **cost model** (DESIGN.md §8): partitioning is
+memoized by graph content, every request's padded-member pipeline
+signature (``core.plan_signature``) probes the program cache, and
+
+- a **hit** dispatches the request solo, immediately, through the
+  *unbatched* fused program (``pipeline_sim``/``_sharded``) — no batch
+  axis, no stacking, no batch wait: warm latency is one cached-program
+  device dispatch;
+- a **miss** routes to the batch lane, where requests needing the same
+  new program share its one compile (and one dispatch).
+
+``prewarm`` compiles the one-lane programs for expected traffic shapes up
+front so steady-state requests take the hit path from the first flush.
+Exchange schemes resolve per bucket at trace time (``scheme="auto"``):
+the pow2-rung-quantized sparse plans are shape-stable, so the sparse
+scheme's byte savings now ride the cached programs instead of forcing
+the allgather fallback.
 
 ``ColoringService`` is the embeddable driver (submit/flush); ``main`` runs
 synthetic RMAT traffic and reports batched-vs-sequential dispatch
@@ -20,13 +37,19 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import time
+from collections import OrderedDict
 
+import jax
 import numpy as np
 
 from repro.core import (ColorConfig, Graph, PipelineConfig, RecolorConfig,
-                        check_coloring, color_many, color_many_sharded,
-                        ordering, partition_graph, rmat)
+                        bucket_graphs, bucket_signature, check_coloring,
+                        color_many, color_many_sharded, compute_order,
+                        ordering, partition_graph, pipeline_sharded,
+                        pipeline_sim, plan_signature,
+                        program_cache_contains, program_cache_stats, rmat)
 
 
 def default_config(*, max_colors: int = 1024, n_iters: int = 8,
@@ -35,12 +58,10 @@ def default_config(*, max_colors: int = 1024, n_iters: int = 8,
     """The service's default pipeline: quality preset shape — Random-X seed
     coloring + ND recoloring with an adaptive stop.
 
-    ``scheme=None`` follows ``$REPRO_SCHEME`` (sparse by default).  A
-    long-running service at small P usually wants ``"allgather"``: the
-    sparse scheme's static round plan is data-derived and lands in the jit
-    cache key, so every fresh batch retraces, while the all-gather program
-    depends on shapes only — with pow2 bucketing (``bucket_graphs``) and
-    pow2 batch lanes it compiles once per bucket shape, ever."""
+    ``scheme=None`` follows ``$REPRO_SCHEME`` (default ``"auto"``): each
+    bucket picks sparse vs allgather at trace time from the modeled wire
+    bytes, and the pow2-rung plan quantization keeps either choice
+    compile-stable — there is no serving reason to force a scheme."""
     kw = {} if scheme is None else dict(scheme=scheme)
     return PipelineConfig(
         color=ColorConfig(max_colors=max_colors, superstep=512,
@@ -50,6 +71,15 @@ def default_config(*, max_colors: int = 1024, n_iters: int = 8,
         n_iters=n_iters, base_perm="nd", patience=patience)
 
 
+def _graph_fingerprint(g: Graph) -> str:
+    """Content hash of a graph — the partition-memo key."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(g.n).tobytes())
+    h.update(np.ascontiguousarray(g.indptr).tobytes())
+    h.update(np.ascontiguousarray(g.indices).tobytes())
+    return h.hexdigest()
+
+
 @dataclasses.dataclass
 class _Job:
     id: int
@@ -57,24 +87,48 @@ class _Job:
     marked: np.ndarray | None
 
 
+@dataclasses.dataclass
+class _Entry:
+    """Memoized per-unique-graph dispatch state (keyed by content hash)."""
+    pg: object          # PartitionedGraph (original dims)
+    bucket: object      # its one-graph GraphBucket (pow2-padded)
+    signature: object   # the bucket's PlanSignature (batch-lane grouping)
+    solo_sig: object    # the padded member's pipeline_sim/_sharded signature
+    order: object       # visit order for the padded member (np array)
+    exact_sig: object   # the original dims' pipeline signature (hot path)
+    exact_order: object  # visit order for the original partition
+
+    @property
+    def member(self):
+        """The pow2-padded partition the solo path dispatches."""
+        return self.bucket.members[0]
+
+
 class ColoringService:
-    """Queue graphs, color them in bucketed batches, return results by id.
+    """Queue graphs, color them via the cost-model router, return by id.
 
     ``submit`` enqueues a ``core.Graph`` (plus an optional per-vertex
     ``marked`` mask when the config is partial) and returns a request id;
-    ``flush`` partitions the queued graphs over ``P`` processors, buckets
-    them, dispatches every bucket through the batched fused pipeline, and
-    returns ``{request_id: result}`` where each result carries ``colors``
-    ``(n,)`` 1-based, ``n_colors``, the per-iteration ``history``,
-    ``n_iters_run`` and (``validate=True``) a ``check_coloring`` report.
+    ``flush`` routes every queued request — program-cache hit → immediate
+    solo dispatch, miss → bucketed batch lane — and returns
+    ``{request_id: result}`` where each result carries ``colors`` ``(n,)``
+    1-based, ``n_colors``, the per-iteration ``history``,
+    ``n_iters_run``, the dispatch ``route`` (``"solo"``/``"batch"``), its
+    ``latency_s`` (wall time of the dispatch that produced it) and
+    (``validate=True``) a ``check_coloring`` report.
 
-    ``mesh=None`` uses the sim executor (P vmap lanes on one device); a
-    mesh with a ``workers`` axis routes through ``color_many_sharded``.
+    Request RNG keys fold the *request id* into the config seeds, so a
+    request's coloring does not depend on which route or batch position
+    served it.  ``mesh=None`` uses the sim executor (P vmap lanes on one
+    device); a mesh with a ``workers`` axis routes through
+    ``color_many_sharded``.  ``stats()`` exposes the router counters and
+    the process-wide program-cache counters.
     """
 
     def __init__(self, *, P: int = 4, cfg: PipelineConfig | None = None,
                  order_kind: str = ordering.INTERNAL_FIRST, mesh=None,
-                 max_batch: int = 64, validate: bool = False, seed: int = 0):
+                 max_batch: int = 64, validate: bool = False, seed: int = 0,
+                 memo_graphs: int = 256):
         self.P = P
         self.cfg = cfg or default_config()
         self.order_kind = order_kind
@@ -84,6 +138,9 @@ class ColoringService:
         self.seed = seed
         self._queue: list[_Job] = []
         self._next_id = 0
+        self._memo: OrderedDict[str, _Entry] = OrderedDict()
+        self._memo_max = memo_graphs
+        self._n_solo = self._n_batch = self._memo_hits = 0
 
     @property
     def pending(self) -> int:
@@ -97,6 +154,65 @@ class ColoringService:
         self._next_id += 1
         return self._queue[-1].id
 
+    def stats(self) -> dict:
+        """Router + program-cache counters (cache stats are process-wide)."""
+        return dict(solo=self._n_solo, batch=self._n_batch,
+                    memo_hits=self._memo_hits, memo_size=len(self._memo),
+                    signatures=len({e.signature
+                                    for e in self._memo.values()}),
+                    **program_cache_stats())
+
+    def prewarm(self, samples) -> float:
+        """Compile the one-lane programs for the given traffic samples.
+
+        ``samples`` — representative ``core.Graph`` instances (e.g. one per
+        expected shape bucket).  Each still-cold sample is dispatched once
+        per missing solo program — the pow2-padded member's (shared by
+        every later same-signature request) and the sample's exact-dims
+        one (the cheapest dispatch for repeat-content traffic) — so
+        steady-state requests take the hit path from their first flush.
+        Returns the wall seconds spent; already-warm samples cost cache
+        probes only.
+        """
+        t0 = time.perf_counter()
+        for g in samples:
+            e = self._entry(g)
+            marked = (np.zeros(g.n, dtype=bool)
+                      if self.cfg.color.partial else None)
+            if not program_cache_contains(e.solo_sig):
+                self._run_solo(_Job(0, g, marked), e, e.member, e.order)
+            if not program_cache_contains(e.exact_sig):
+                self._run_solo(_Job(0, g, marked), e, e.pg, e.exact_order)
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------ internals --
+
+    @property
+    def _halo(self) -> int:
+        return 2 if self.cfg.recolor.distance == 2 else 1
+
+    def _entry(self, g: Graph) -> _Entry:
+        """Partition + bucket + signature, memoized by graph content."""
+        fp = _graph_fingerprint(g)
+        e = self._memo.get(fp)
+        if e is not None:
+            self._memo.move_to_end(fp)
+            self._memo_hits += 1
+            return e
+        pg = partition_graph(g, self.P, seed=self.seed, halo=self._halo)
+        bucket = bucket_graphs([pg])[0]
+        sig = bucket_signature(bucket, self.cfg, mesh=self.mesh)
+        member = bucket.members[0]
+        e = _Entry(pg=pg, bucket=bucket, signature=sig,
+                   solo_sig=plan_signature(member, self.cfg, mesh=self.mesh),
+                   order=compute_order(member, self.order_kind),
+                   exact_sig=plan_signature(pg, self.cfg, mesh=self.mesh),
+                   exact_order=compute_order(pg, self.order_kind))
+        self._memo[fp] = e
+        while len(self._memo) > self._memo_max:
+            self._memo.popitem(last=False)
+        return e
+
     def _marked_blocks(self, pg, marked_g):
         """Global per-vertex mask -> the (P, n_local_max) block layout."""
         out = np.zeros((pg.P, pg.n_local_max), dtype=bool)
@@ -105,39 +221,125 @@ class ColoringService:
             out[p, :nl] = marked_g[lo:lo + nl]
         return out
 
+    def _keys(self, jobs):
+        """Request-id-folded per-graph keys: route-independent results."""
+        ck = jax.random.key(self.cfg.color.seed)
+        rk = jax.random.key(self.cfg.seed)
+        return ([jax.random.fold_in(ck, j.id) for j in jobs],
+                [jax.random.fold_in(rk, j.id) for j in jobs])
+
+    def _solo_dispatch(self, job, e: _Entry) -> dict:
+        """One request through the *unbatched* fused program — the hit path.
+
+        No batch axis, no stacking, no unpacking: warm same-program latency
+        is one cached-program device dispatch (bitwise equal to the batch
+        lane — padding is inert and the request-id-folded keys are route-
+        independent).  Prefers the original-dims program (no padding
+        compute; ``prewarm`` compiles it for sample graphs) and falls back
+        to the pow2-padded member's, which fresh same-signature graphs
+        share."""
+        if program_cache_contains(e.exact_sig):
+            tgt, order = e.pg, e.exact_order
+        else:
+            tgt, order = e.member, e.order
+        return self._run_solo(job, e, tgt, order)
+
+    def _run_solo(self, job, e: _Entry, tgt, order) -> dict:
+        cks, rks = self._keys([job])
+        marked = (self._marked_blocks(tgt, job.marked)
+                  if self.cfg.color.partial else None)
+        run = (pipeline_sim if self.mesh is None else
+               lambda *a, **kw: pipeline_sharded(a[0], a[1], a[2], self.mesh,
+                                                 **kw))
+        view, res = run(tgt, order, self.cfg, marked=marked,
+                        color_key=cks[0], recolor_key=rks[0])
+        view = np.asarray(view)
+        return dict(
+            colors=e.pg.gather_global_colors(view[:, :e.pg.n_local_max]),
+            color=res["color"], history=res["history"],
+            n_iters_run=res["n_iters_run"], bucket=0)
+
+    def _dispatch(self, jobs, entries=None, buckets=None):
+        """One ``color_many`` call for ``jobs`` (solo entry or cold group)."""
+        pgs = [e.pg for e in entries] if entries is not None else [
+            partition_graph(j.graph, self.P, seed=self.seed, halo=self._halo)
+            for j in jobs]
+        if entries is not None and buckets is None:
+            # reuse the memoized bucket object whenever its indices already
+            # line up (always true for solo dispatch) — its union plan and
+            # stacked arrays are cached on the instance, so a warm request
+            # pays no host-side re-stack
+            buckets = [e.bucket if e.bucket.indices == (i,) else
+                       dataclasses.replace(e.bucket, indices=(i,))
+                       for i, e in enumerate(entries)]
+        marked = None
+        if self.cfg.color.partial:
+            marked = [self._marked_blocks(pg, j.marked)
+                      for pg, j in zip(pgs, jobs)]
+        cks, rks = self._keys(jobs)
+        run = (color_many if self.mesh is None
+               else lambda *a, **kw: color_many_sharded(
+                   a[0], a[1], self.mesh, **kw))
+        # pad_batch: pow2 batch lanes keep program shapes stable as the
+        # queue depth fluctuates, so steady-state flushes stay compiled
+        return run(pgs, self.cfg, orders=self.order_kind, marked=marked,
+                   color_keys=cks, recolor_keys=rks, buckets=buckets,
+                   pad_batch=True)
+
+    def _finish(self, job, r, latency, route, results):
+        out = dict(colors=r["colors"],
+                   n_colors=(r["history"][-1]["n_colors_distinct"]
+                             if r["history"]
+                             else r["color"]["n_colors_distinct"]),
+                   history=r["history"], n_iters_run=r["n_iters_run"],
+                   bucket=r["bucket"], route=route, latency_s=latency)
+        if self.validate:
+            out["check"] = check_coloring(
+                job.graph, r["colors"],
+                distance=self.cfg.recolor.distance, marked=job.marked)
+            assert out["check"]["valid"], (job.id, out["check"])
+        results[job.id] = out
+
     def flush(self) -> dict[int, dict]:
-        """Dispatch the queue in batches of ``max_batch``; returns by id."""
+        """Route and dispatch the queue in waves of ``max_batch``."""
         results: dict[int, dict] = {}
-        halo = 2 if self.cfg.recolor.distance == 2 else 1
         while self._queue:
             jobs, self._queue = (self._queue[:self.max_batch],
                                  self._queue[self.max_batch:])
-            pgs = [partition_graph(j.graph, self.P, seed=self.seed, halo=halo)
-                   for j in jobs]
-            marked = None
-            if self.cfg.color.partial:
-                marked = [self._marked_blocks(pg, j.marked)
-                          for pg, j in zip(pgs, jobs)]
-            run = (color_many if self.mesh is None
-                   else lambda *a, **kw: color_many_sharded(
-                       a[0], a[1], self.mesh, **kw))
-            # pad_batch: pow2 batch lanes keep program shapes stable as the
-            # queue depth fluctuates, so steady-state flushes stay compiled
-            batch = run(pgs, self.cfg, orders=self.order_kind, marked=marked,
-                        pad_batch=True)
-            for j, r in zip(jobs, batch):
-                out = dict(colors=r["colors"],
-                           n_colors=(r["history"][-1]["n_colors_distinct"]
-                                     if r["history"]
-                                     else r["color"]["n_colors_distinct"]),
-                           history=r["history"],
-                           n_iters_run=r["n_iters_run"], bucket=r["bucket"])
-                if self.validate:
-                    out["check"] = check_coloring(
-                        j.graph, r["colors"],
-                        distance=self.cfg.recolor.distance, marked=j.marked)
-                    assert out["check"]["valid"], (j.id, out["check"])
-                results[j.id] = out
+            pairs = [(j, self._entry(j.graph)) for j in jobs]
+
+            def _warm(e):
+                return (program_cache_contains(e.solo_sig)
+                        or program_cache_contains(e.exact_sig))
+
+            warm = [(j, e) for j, e in pairs if _warm(e)]
+            cold = [(j, e) for j, e in pairs if not _warm(e)]
+            # hit path: the program is compiled — serve each request now,
+            # individually (latency = one device dispatch, no batch wait)
+            for j, e in warm:
+                t0 = time.perf_counter()
+                out = self._solo_dispatch(j, e)
+                self._finish(j, out, time.perf_counter() - t0, "solo",
+                             results)
+                self._n_solo += 1
+            # miss path: group the new shapes so each fresh program
+            # compiles (and dispatches) once for its whole sub-batch.
+            # Grouping by *solo signature* (not raw dims) makes the group's
+            # padded dims and union plan equal every member's own — pow2 of
+            # a max is the max of pow2s — so the same traffic shape produces
+            # the same batch program on every future flush.
+            groups: OrderedDict = OrderedDict()
+            for j, e in cold:
+                groups.setdefault(e.signature, []).append((j, e))
+            for sub in groups.values():
+                bucket = bucket_graphs([e.pg for _, e in sub])[0]
+                t0 = time.perf_counter()
+                outs = self._dispatch([j for j, _ in sub],
+                                      [e for _, e in sub], [bucket])
+                lat = time.perf_counter() - t0
+                for (j, _), r in zip(sub, outs):
+                    self._finish(j, r, lat, "batch", results)
+                    self._n_batch += 1
         return results
 
 
@@ -164,26 +366,36 @@ def main():
     graphs = _traffic(args.graphs, args.scale_min, args.scale_max, args.seed)
     svc = ColoringService(
         P=args.p, validate=True,
-        cfg=default_config(max_colors=args.max_colors, n_iters=args.iters,
-                           scheme="allgather"))   # shape-stable programs
+        cfg=default_config(max_colors=args.max_colors, n_iters=args.iters))
     ids = [svc.submit(g) for g in graphs]
 
     t0 = time.time()
     res = svc.flush()                      # includes compile on first flush
     t_cold = time.time() - t0
     n_buckets = max(r["bucket"] for r in res.values()) + 1
-    # steady state: FRESH graphs still hit the compiled bucket programs
-    # (pow2 shapes + pow2 batch lanes + shape-only allgather exchange)
+    # compile the one-lane programs for the shapes just seen, so
+    # steady-state requests take the solo hit path from their first flush
+    t_pre = svc.prewarm(graphs)
+    # steady state: FRESH graphs still hit the compiled programs
+    # (pow2 plan rungs + pow2 shapes + pow2 batch lanes)
     for g in _traffic(args.graphs, args.scale_min, args.scale_max,
                       args.seed + 1):
         svc.submit(g)
     t0 = time.time()
-    svc.flush()
+    res2 = svc.flush()
     t_warm = time.time() - t0
+    lats = sorted(r["latency_s"] for r in res2.values())
+    st = svc.stats()
+    hit_rate = st["hits"] / max(st["hits"] + st["misses"], 1)
 
     print(f"served {len(ids)} graphs over {n_buckets} buckets at "
-          f"P={args.p}: cold {t_cold:.2f}s, warm {t_warm:.3f}s "
+          f"P={args.p}: cold {t_cold:.2f}s, prewarm {t_pre:.2f}s, "
+          f"warm {t_warm:.3f}s "
           f"({len(ids) / max(t_warm, 1e-9):.1f} graphs/s)")
+    print(f"routes solo={st['solo']} batch={st['batch']} "
+          f"program-cache hit rate {hit_rate:.2f} "
+          f"p50 {lats[len(lats) // 2] * 1e3:.1f}ms "
+          f"p99 {lats[min(len(lats) - 1, int(len(lats) * 0.99))] * 1e3:.1f}ms")
     for i in ids[:8]:
         r = res[i]
         print(f"  req {i}: {r['n_colors']} colors after "

@@ -2,11 +2,12 @@
 design (the 512-device mesh is exercised only via repro.launch.dryrun and the
 subprocess-based tests below).
 
-The suite runs under a ``scheme={sparse,allgather}`` CI matrix: setting
+The suite runs under a ``scheme={sparse,allgather,auto}`` CI matrix: setting
 ``REPRO_SCHEME`` flips the *default* boundary-exchange scheme of every config
 (see ``repro.core.comm.DEFAULT_SCHEME``), so each push exercises both
-exchange paths end-to-end.  Colorings are bitwise-identical across schemes,
-which is exactly why all golden pins must hold under either value.
+exchange paths end-to-end plus the trace-time auto decision.  Colorings are
+bitwise-identical across schemes, which is exactly why all golden pins must
+hold under any value.
 """
 import os
 
@@ -29,10 +30,10 @@ def exchange_scheme():
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
     scheme = os.environ.get("REPRO_SCHEME")
-    if scheme is not None and scheme not in ("sparse", "allgather"):
+    if scheme is not None and scheme not in ("sparse", "allgather", "auto"):
         raise pytest.UsageError(
-            f"REPRO_SCHEME={scheme!r} invalid, want sparse|allgather")
+            f"REPRO_SCHEME={scheme!r} invalid, want sparse|allgather|auto")
 
 
 def pytest_report_header(config):
-    return f"repro exchange scheme: {os.environ.get('REPRO_SCHEME', 'sparse')}"
+    return f"repro exchange scheme: {os.environ.get('REPRO_SCHEME', 'auto')}"

@@ -162,10 +162,14 @@ def test_comm_plan_structure():
         owners = pg.ghost_owner[q, :ng]
         for p in range(P):
             assert plan.n_send[p, q] == int((owners == p).sum())
-    # widths are the per-shift maxima; every send row is sentinel-padded
+    # exact widths are the per-shift maxima; compiled widths are their
+    # pow2 rungs (shape-static quantization); every send row is
+    # sentinel-padded out to the rung
+    from repro.core.graph import _ceil_pow2
     for r, k in enumerate(plan.shifts):
         counts = [plan.n_send[p, (p + k) % P] for p in range(P)]
-        assert plan.widths[r] == max(counts)
+        assert plan.exact_widths[r] == max(counts)
+        assert plan.widths[r] == _ceil_pow2(max(counts))
         for p in range(P):
             row = plan.send_slot[p, r]
             c = plan.n_send[p, (p + k) % P]

@@ -68,6 +68,48 @@ def test_allgather_wire_bytes_match_model(pgraph):
         assert _measure(pgraph, "allgather", np.asarray(bits)) == model
 
 
+def test_quantized_plan_bitwise_equals_exact_plan(pgraph):
+    """pow2-rung width quantization is inert (DESIGN.md §2).
+
+    The rung plan's buffer shapes only widen; padding entries are never
+    read and never counted, so (a) the exact byte model is unchanged for
+    every round-mask subset, and (b) a full fused pipeline run on an
+    exact-plan twin is bitwise identical — views and measured wire bytes.
+    """
+    import dataclasses
+
+    from repro.core import build_comm_plan, compute_order
+    from repro.core.graph import _ceil_pow2
+    from repro.core.pipeline import PipelineConfig, pipeline_sim
+
+    plan_q = pgraph.comm_plan                      # quantized by default
+    plan_e = build_comm_plan(pgraph, quantize=False)
+    assert plan_q.shifts == plan_e.shifts
+    assert plan_q.exact_widths == plan_e.exact_widths == plan_e.widths
+    assert plan_q.widths == tuple(_ceil_pow2(w) for w in plan_e.widths)
+    n_rounds = len(plan_q.shifts)
+    for bits in itertools.product((False, True), repeat=n_rounds):
+        assert (plan_q.bytes_per_exchange(round_mask=bits)
+                == plan_e.bytes_per_exchange(round_mask=bits))
+    # only the padded accounting sees the rung waste
+    assert (plan_q.bytes_per_exchange(padded=True)
+            >= plan_e.bytes_per_exchange(padded=True)
+            == plan_e.bytes_per_exchange())
+
+    pg_e = dataclasses.replace(pgraph, quantize_plan=False)
+    assert pg_e.comm_plan.widths == plan_e.widths
+    cfg = PipelineConfig(
+        color=ColorConfig(max_colors=64, scheme="sparse"),
+        recolor=RecolorConfig(max_colors=64, scheme="sparse"),
+        n_iters=2, patience=0)
+    order = compute_order(pgraph, "internal_first")
+    v_q, res_q = pipeline_sim(pgraph, order, cfg)
+    v_e, res_e = pipeline_sim(pg_e, order, cfg)
+    np.testing.assert_array_equal(np.asarray(v_q), np.asarray(v_e))
+    assert res_q["color"]["wire_bytes"] == res_e["color"]["wire_bytes"]
+    assert res_q["history"] == res_e["history"]    # every stat, bitwise
+
+
 def test_default_scheme_follows_env(exchange_scheme):
     """The CI matrix knob: config defaults track $REPRO_SCHEME."""
     assert ColorConfig().scheme == exchange_scheme
