@@ -2,6 +2,8 @@
 
   python benchmarks/make_report.py bench [root]   — the README's bench
         summary table, regenerated from the BENCH_*.json files
+  python benchmarks/make_report.py lint [target..] — repro-lint summary
+        table (per-rule finding counts against the committed baseline)
   python benchmarks/make_report.py [mesh] [dir]   — the EXPERIMENTS.md
         §Roofline table from dry-run JSONs (legacy default)
 """
@@ -111,8 +113,27 @@ def table(dryrun_dir="experiments/dryrun_final", mesh="pod16x16"):
     return "\n".join(out)
 
 
+def lint_table(targets=("src",), root: str | Path = ".") -> str:
+    """Markdown summary of a repro-lint run (DESIGN.md §9) over ``targets``."""
+    repo = Path(root).resolve()
+    sys.path.insert(0, str(repo / "src"))
+    from repro.analysis import RULES, run_lint
+    res = run_lint(list(targets), root=repo,
+                   baseline=repo / "tools" / "repro_lint_baseline.json")
+    counts = res.counts()
+    out = ["| rule | new findings |", "|---|---|"]
+    out += [f"| `{rid}` | {counts.get(rid, 0)} |" for rid in sorted(RULES)]
+    out.append(
+        f"\n{res.n_files} file(s), {len(res.findings)} new, "
+        f"{len(res.baselined)} baselined, {res.suppressed} suppression(s), "
+        f"{len(res.errors)} error(s) — {'OK' if res.ok else 'FAIL'}")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
-    if len(sys.argv) > 1 and sys.argv[1] == "bench":
+    if len(sys.argv) > 1 and sys.argv[1] == "lint":
+        print(lint_table(tuple(sys.argv[2:]) or ("src",)))
+    elif len(sys.argv) > 1 and sys.argv[1] == "bench":
         print(bench_table(sys.argv[2] if len(sys.argv) > 2 else "."))
     else:
         mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"

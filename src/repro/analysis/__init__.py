@@ -1,0 +1,25 @@
+"""repro-lint: SPMD-safety static analysis + jaxpr trace audit.
+
+Two layers (DESIGN.md §9):
+
+- the **AST rule engine** (``engine.run_lint``) — five rules grounded in
+  this repo's shipped-and-fixed bug history: ``key-reuse`` (PR 4),
+  ``id-overflow`` (PR 3), ``host-sync``, ``divergent-collective`` and
+  ``nonuniform-loop`` (PR 6 / the SPMD uniformity invariant).
+- the **trace audit** (``trace_audit.run_trace_audit``) — abstract-evals
+  the public entry points at P=2 and asserts on the jaxpr itself:
+  identical collective sequences across shards and schemes, zero host
+  callbacks inside the fused loop bodies, one compile per PlanSignature.
+
+CLI: ``python -m tools.repro_lint src`` (see tools/repro_lint.py).
+"""
+from .engine import (ANALYSIS_RULES, RULES, FileContext, LintResult,
+                     lint_source, run_lint)
+from .findings import (Finding, count_suppressions, load_baseline,
+                       parse_suppressions, split_baselined, write_baseline)
+
+__all__ = [
+    "ANALYSIS_RULES", "RULES", "FileContext", "LintResult", "Finding",
+    "lint_source", "run_lint", "count_suppressions", "parse_suppressions",
+    "load_baseline", "split_baselined", "write_baseline",
+]

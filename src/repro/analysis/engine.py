@@ -1,0 +1,132 @@
+"""Rule registry + file walker: the AST layer of repro-lint.
+
+``run_lint`` is the library entry point (the ``tools.repro_lint`` CLI and
+the CI job are thin wrappers): walk the targets, parse each python file
+once, run the shard-uniformity analysis once, hand the shared context to
+every rule, then subtract inline suppressions and the committed baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from pathlib import Path
+
+from . import rules_numeric, rules_rng, rules_spmd, uniformity
+from .findings import (Finding, is_suppressed, load_baseline,
+                       parse_suppressions, split_baselined)
+
+#: rule id -> checker.  Checkers take a :class:`FileContext` and return
+#: findings; ids are what suppressions and the baseline refer to.
+RULES = {
+    "key-reuse": rules_rng.check_key_reuse,
+    "id-overflow": rules_numeric.check_id_overflow,
+    "host-sync": rules_spmd.check_host_sync,
+    "divergent-collective": rules_spmd.check_divergent_collective,
+    "nonuniform-loop": rules_spmd.check_nonuniform_loop,
+}
+
+# Rules that need the uniformity analysis (skipped when parsing-only rules
+# are requested, so fixture tests stay fast).
+ANALYSIS_RULES = {"host-sync", "divergent-collective", "nonuniform-loop"}
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule may look at for one file."""
+
+    path: str                       # repo-relative posix path
+    source: str
+    tree: object                    # ast.Module
+    analysis: object | None         # uniformity.ModuleAnalysis | None
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]         # new (non-baselined, non-suppressed)
+    baselined: list[Finding]
+    suppressed: int
+    n_files: int
+    errors: list[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.errors
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+
+def iter_py_files(targets: list[str | Path], root: Path) -> list[Path]:
+    files: list[Path] = []
+    for t in targets:
+        p = (root / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def lint_source(source: str, path: str, rules: list[str] | None = None,
+                errors: list[str] | None = None) -> list[Finding]:
+    """Lint one in-memory source blob (fixture tests call this directly).
+
+    ``path`` matters: the host-sync rule only applies under
+    ``core/``/``kernels/``.  Suppressions are applied, the baseline is not.
+    """
+    import ast
+    rule_ids = list(rules) if rules is not None else list(RULES)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        (errors if errors is not None else []).append(f"{path}: {e}")
+        return []
+    analysis = None
+    if any(r in ANALYSIS_RULES for r in rule_ids):
+        try:
+            mod = uniformity.ModuleAnalysis(tree, path)
+            mod.run()
+            analysis = mod
+        except RecursionError as e:   # fail open, loudly
+            msg = f"{path}: uniformity analysis failed: {e!r}"
+            if errors is not None:
+                errors.append(msg)
+            else:
+                print(f"repro-lint: {msg}", file=sys.stderr)
+    ctx = FileContext(path=path, source=source, tree=tree, analysis=analysis)
+    suppressions = parse_suppressions(source)
+    out: list[Finding] = []
+    for rid in rule_ids:
+        for f in RULES[rid](ctx):
+            if not is_suppressed(f, suppressions):
+                out.append(f)
+    return sorted(out)
+
+
+def run_lint(targets: list[str | Path], root: str | Path = ".",
+             baseline: str | Path | None = None,
+             rules: list[str] | None = None) -> LintResult:
+    """Lint every ``*.py`` under ``targets`` (paths relative to ``root``)."""
+    root = Path(root).resolve()
+    errors: list[str] = []
+    all_findings: list[Finding] = []
+    suppressed = 0
+    files = iter_py_files(targets, root)
+    for p in files:
+        try:
+            source = p.read_text()
+        except OSError as e:
+            errors.append(f"{p}: {e}")
+            continue
+        rel = p.resolve().relative_to(root).as_posix() \
+            if p.resolve().is_relative_to(root) else p.as_posix()
+        before = len(parse_suppressions(source))
+        suppressed += before
+        all_findings.extend(lint_source(source, rel, rules, errors))
+    base = load_baseline(baseline) if baseline else set()
+    new, old = split_baselined(all_findings, base)
+    return LintResult(findings=new, baselined=old, suppressed=suppressed,
+                      n_files=len(files), errors=errors)

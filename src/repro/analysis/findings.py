@@ -1,0 +1,91 @@
+"""Findings, inline suppressions and the committed baseline.
+
+A :class:`Finding` is one rule hit at one source location.  Two escape
+hatches keep the linter adoptable without blocking on a full cleanup:
+
+- **inline suppressions** — a ``# repro-lint: disable=<rule>[,<rule>...]``
+  comment on the offending line silences those rules for that line only.
+  The tier-1 self-check asserts ``src/repro/core`` and ``src/repro/kernels``
+  carry *zero* of these (DESIGN.md §9): hot-path code must satisfy the
+  rules outright (via real fixes or ``comm.shard_uniform`` contracts),
+  suppressions are for cold host-side code.
+- **the baseline** — ``tools/repro_lint_baseline.json`` lists known legacy
+  findings as ``{path, rule, message}`` records.  Matching ignores line
+  numbers, so unrelated edits never resurrect a baselined finding; any
+  finding *not* in the baseline fails CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from pathlib import Path
+
+SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    path: str          # repo-relative posix path
+    line: int          # 1-based source line
+    rule: str          # rule id, e.g. "key-reuse"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def key(self) -> tuple:
+        """Baseline identity: line numbers are deliberately excluded."""
+        return (self.path, self.rule, self.message)
+
+
+def parse_suppressions(source: str) -> dict[int, set[str]]:
+    """Map line number -> set of rule ids disabled on that line.
+
+    ``disable=all`` silences every rule for the line.
+    """
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(text)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def is_suppressed(f: Finding, suppressions: dict[int, set[str]]) -> bool:
+    rules = suppressions.get(f.line)
+    return bool(rules) and (f.rule in rules or "all" in rules)
+
+
+def count_suppressions(source: str) -> int:
+    """Number of inline suppression comments in ``source`` (the self-check
+    pins this to zero for core/ and kernels/)."""
+    return len(parse_suppressions(source))
+
+
+def load_baseline(path: str | Path) -> set[tuple]:
+    """Load the committed baseline as a set of :meth:`Finding.key` tuples."""
+    p = Path(path)
+    if not p.exists():
+        return set()
+    records = json.loads(p.read_text())
+    return {(r["path"], r["rule"], r["message"]) for r in records}
+
+
+def write_baseline(findings: list[Finding], path: str | Path) -> None:
+    """Write ``findings`` as a fresh baseline file (``--write-baseline``)."""
+    records = [dict(path=f.path, rule=f.rule, message=f.message)
+               for f in sorted(set(findings))]
+    Path(path).write_text(json.dumps(records, indent=2, sort_keys=True) + "\n")
+
+
+def split_baselined(findings: list[Finding], baseline: set[tuple]
+                    ) -> tuple[list[Finding], list[Finding]]:
+    """Partition into (new, baselined).  A baseline record matches every
+    finding with the same (path, rule, message) regardless of line."""
+    new, old = [], []
+    for f in findings:
+        (old if f.key() in baseline else new).append(f)
+    return new, old

@@ -1,0 +1,104 @@
+"""id-overflow: packed-id arithmetic without explicit int64 promotion.
+
+Grounded in PR 3's bug: ``u * n + v`` on int32 vertex ids silently wraps
+once ``n * maxid`` crosses 2**31 (RMAT scale >= 32), producing a *valid
+looking* but wrong edge key.  numpy's NEP-50 promotion keeps the int32
+dtype when one side is a python int, so the overflow is invisible until
+the graph is large enough — exactly the failure a static check catches
+and a test on small graphs cannot.
+
+The rule fires on additive combinations of a multiplicative id term —
+``X * S + Y`` (any nesting, e.g. ``ii * ny * nz + jj * nz + kk``) — when
+
+- the multiplication mixes an id-like name (``u``, ``v``, ``src``,
+  ``dst``, ``row``, ``vid``, ``cid``, ``ii`` ...) with a size-like name
+  (``n``, ``cols``, ``grid_n``, ``n_global`` ...), and
+- no node of the expression promotes to a 64-bit dtype
+  (``.astype(np.int64)``, ``np.int64(...)``, ``dtype=np.int64`` ...).
+
+Pure size-by-size arithmetic (``n_local_max * maxd``) and already-promoted
+packings stay quiet.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from .findings import Finding
+
+ID_NAMES = {"u", "v", "src", "dst", "row", "rows", "col", "vid", "vids",
+            "cid", "gid", "nid", "eid", "ii", "jj", "kk", "ni", "nj", "nk",
+            "iu", "iv", "owner", "slot", "idx", "ids", "node", "vertex",
+            "edge_src", "edge_dst", "indices"}
+SIZE_NAMES = {"n", "cols", "ncols", "grid_n", "ny", "nz", "nx", "n_global",
+              "n_total", "num_nodes", "n_nodes", "width", "stride",
+              "n_cols", "dim", "side", "m"}
+PROMOTED = re.compile(r"int64|uint64|i8\b|int_\b")
+
+
+def _names(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)} | {
+        n.attr for n in ast.walk(node) if isinstance(n, ast.Attribute)}
+
+
+def _is_promoted(node: ast.AST) -> bool:
+    """Any 64-bit promotion inside the expression silences the rule."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = n.func
+            if isinstance(f, ast.Attribute) and f.attr == "astype":
+                if any(PROMOTED.search(ast.unparse(a)) for a in n.args):
+                    return True
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else "")
+            if PROMOTED.search(name or ""):
+                return True
+            for kw in n.keywords:
+                if kw.arg == "dtype" and PROMOTED.search(
+                        ast.unparse(kw.value)):
+                    return True
+        if isinstance(n, ast.Attribute) and PROMOTED.search(n.attr):
+            return True
+    return False
+
+
+def _id_mult(node: ast.AST) -> bool:
+    """Is ``node`` (or a sub-product) an id-name times a size-name?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult):
+            left, right = _names(n.left), _names(n.right)
+            if ((left & ID_NAMES and right & SIZE_NAMES)
+                    or (right & ID_NAMES and left & SIZE_NAMES)):
+                return True
+    return False
+
+
+def check_id_overflow(ctx) -> list[Finding]:
+    findings = []
+    covered: set[int] = set()     # descendants of an already-reported Add
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add)):
+            continue
+        if id(node) in covered:
+            continue
+        mult_side, other = None, None
+        if _id_mult(node.left):
+            mult_side, other = node.left, node.right
+        elif _id_mult(node.right):
+            mult_side, other = node.right, node.left
+        if mult_side is None:
+            continue
+        if not (_names(other) & ID_NAMES):
+            continue
+        if _is_promoted(node):
+            continue
+        covered.update(id(n) for n in ast.walk(node)
+                       if isinstance(n, ast.BinOp))
+        expr = ast.unparse(node)
+        if len(expr) > 60:
+            expr = expr[:57] + "..."
+        findings.append(Finding(
+            ctx.path, node.lineno, "id-overflow",
+            f"id packing '{expr}' combines id and size without explicit "
+            f"int64 promotion (wraps at 2**31, cf. PR 3)"))
+    return findings

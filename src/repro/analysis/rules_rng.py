@@ -1,0 +1,219 @@
+"""key-reuse: the same PRNG key consumed by two samplers without a
+``split``/``fold_in`` in between.
+
+Grounded in PR 4's bug class: a replayed key makes "independent" random
+permutations identical, which silently degrades recoloring quality while
+every test that checks *validity* still passes.  Two patterns fire:
+
+1. **linear reuse** — within one function, a key-typed name is passed to a
+   second sampler (``jax.random.bits``/``uniform``/``permutation``/...)
+   without being re-derived (``split``/``fold_in``) or re-bound since its
+   first consumption.
+2. **loop reuse** — a sampler inside a python ``for``/``while`` consumes a
+   key that is never re-derived inside the loop body (the canonical fix is
+   ``ikey = jax.random.fold_in(key, i)`` per iteration).
+
+Only names *proven* key-typed are tracked (assigned from
+``PRNGKey``/``key``/``split``/``fold_in``, or parameters named like keys),
+so ordinary arrays passed to two functions never false-positive.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from .findings import Finding
+
+# jax.random samplers that consume (and thus "use up") a key
+SAMPLERS = {"bits", "uniform", "normal", "randint", "permutation", "choice",
+            "bernoulli", "categorical", "gamma", "beta", "dirichlet",
+            "exponential", "gumbel", "laplace", "truncated_normal",
+            "shuffle", "rademacher", "poisson", "binomial", "ball",
+            "cauchy", "maxwell", "orthogonal", "t"}
+# calls that *derive* fresh keys (never consume)
+DERIVERS = {"split", "fold_in"}
+MAKERS = {"PRNGKey", "key"}
+KEYLIKE_PARAM = re.compile(r"(^|_)(key|keys|rng|prngkey)s?($|\d)", re.I)
+
+
+def _sampler_name(call: ast.Call) -> str | None:
+    """Name of the jax.random sampler if this call is one, else None."""
+    f = call.func
+    name = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    if name is None:
+        return None
+    if name in DERIVERS or name in MAKERS:
+        return None
+    if name not in SAMPLERS:
+        return None
+    # require a `random`-ish receiver (jax.random.bits / jrandom.bits) or a
+    # bare from-import name; `x.permutation` on arbitrary objects is skipped
+    # unless the receiver mentions random.
+    if isinstance(f, ast.Attribute):
+        recv = ast.unparse(f.value)
+        if "random" not in recv and recv not in ("jr", "jrnd", "jrandom"):
+            return None
+    return name
+
+
+def _call_kind(call: ast.Call) -> str | None:
+    f = call.func
+    name = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    if name in MAKERS and (not isinstance(f, ast.Attribute)
+                           or "random" in ast.unparse(f.value)):
+        return "maker"
+    if name in DERIVERS:
+        return "deriver"
+    if _sampler_name(call):
+        return "sampler"
+    return None
+
+
+def _key_args(call: ast.Call) -> list[str]:
+    """Key-candidate Name arguments of a sampler/deriver call."""
+    out = []
+    for a in list(call.args) + [k.value for k in call.keywords]:
+        if isinstance(a, ast.Name):
+            out.append(a.id)
+    return out
+
+
+class _FuncScan:
+    """Linear consumed-state scan of one function body."""
+
+    def __init__(self, path: str, findings: list[Finding]):
+        self.path = path
+        self.findings = findings
+        # name -> line of first consumption (None = tracked, not consumed)
+        self.state: dict[str, int | None] = {}
+
+    def track(self, name: str) -> None:
+        self.state[name] = None
+
+    def untrack(self, name: str) -> None:
+        self.state.pop(name, None)
+
+    def handle_call(self, call: ast.Call) -> None:
+        kind = _call_kind(call)
+        if kind == "sampler":
+            for name in _key_args(call):
+                if name not in self.state:
+                    continue
+                first = self.state[name]
+                if first is not None:
+                    self.findings.append(Finding(
+                        self.path, call.lineno, "key-reuse",
+                        f"PRNG key '{name}' consumed again without "
+                        f"split/fold_in (first consumed on line {first})"))
+                else:
+                    self.state[name] = call.lineno
+
+    def handle_assign_targets(self, targets: list[ast.expr],
+                              value: ast.expr) -> None:
+        kind = _call_kind(value) if isinstance(value, ast.Call) else None
+        for t in targets:
+            names = []
+            if isinstance(t, ast.Name):
+                names = [t.id]
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                names = [e.id for e in t.elts if isinstance(e, ast.Name)]
+            for n in names:
+                if kind in ("maker", "deriver"):
+                    self.track(n)         # fresh key value
+                elif n in self.state:
+                    self.untrack(n)       # rebound to something else
+
+    def scan(self, stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue                  # nested defs scanned separately
+            if isinstance(st, ast.If):
+                # consumption on exclusive branches is not a replay: scan
+                # each arm from a copy, then merge consumed lines
+                self._visit_expr(st.test)
+                pre = dict(self.state)
+                self.scan(st.body)
+                s1 = self.state
+                self.state = dict(pre)
+                self.scan(st.orelse)
+                s2 = self.state
+                merged = {}
+                for n in set(s1) | set(s2):
+                    a, b = s1.get(n, pre.get(n)), s2.get(n, pre.get(n))
+                    if n in s1 or n in s2:
+                        merged[n] = a if a is not None else b
+                self.state = merged
+                continue
+            if isinstance(st, (ast.For, ast.While)):
+                self._scan_loop(st)
+                continue
+            if isinstance(st, ast.Try):
+                self.scan(st.body)
+                for h in st.handlers:
+                    self.scan(h.body)
+                self.scan(st.orelse)
+                self.scan(st.finalbody)
+                continue
+            if isinstance(st, ast.Assign):
+                self._visit_expr(st.value)
+                self.handle_assign_targets(st.targets, st.value)
+                continue
+            if isinstance(st, ast.AnnAssign) and st.value is not None:
+                self._visit_expr(st.value)
+                self.handle_assign_targets([st.target], st.value)
+                continue
+            if isinstance(st, ast.With):
+                self.scan(st.body)
+                continue
+            for n in ast.walk(st):
+                if isinstance(n, ast.expr):
+                    self._visit_expr(n)
+                    break
+
+    def _visit_expr(self, expr: ast.expr) -> None:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call):
+                self.handle_call(n)
+
+    def _scan_loop(self, st: ast.For | ast.While) -> None:
+        # names re-derived or re-bound anywhere inside the loop body
+        rebound: set[str] = set()
+        if isinstance(st, ast.For):
+            for n in ast.walk(st.target):
+                if isinstance(n, ast.Name):
+                    rebound.add(n.id)
+        for n in ast.walk(st):
+            if isinstance(n, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                tgts = n.targets if isinstance(n, ast.Assign) else [n.target]
+                for t in tgts:
+                    for m in ast.walk(t):
+                        if isinstance(m, ast.Name):
+                            rebound.add(m.id)
+        for n in ast.walk(st):
+            if isinstance(n, ast.Call) and _call_kind(n) == "sampler":
+                for name in _key_args(n):
+                    if name in self.state and name not in rebound:
+                        self.findings.append(Finding(
+                            self.path, n.lineno, "key-reuse",
+                            f"PRNG key '{name}' sampled inside a loop "
+                            f"without a per-iteration fold_in/split"))
+        # loop body consumption still updates linear state (one pass)
+        self.scan(st.body)
+        self.scan(st.orelse)
+
+
+def check_key_reuse(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in [n for n in ast.walk(ctx.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Module))]:
+        scan = _FuncScan(ctx.path, findings)
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for a in (list(fn.args.posonlyargs) + list(fn.args.args)
+                      + list(fn.args.kwonlyargs)):
+                if KEYLIKE_PARAM.search(a.arg):
+                    scan.track(a.arg)
+        scan.scan(fn.body)
+    return findings

@@ -1,0 +1,91 @@
+"""The three SPMD rules driven by the uniformity analysis (uniformity.py):
+
+- **host-sync** — ``int()``/``.item()``/``np.asarray`` on a traced value
+  inside device code under ``core/``/``kernels/``.  Each one is a silent
+  device->host round trip inside what should be a fused program;
+  ``comm.stats_to_host`` is the one blessed exit.  Static arguments
+  (``int(x.shape[0])``) never fire.
+- **divergent-collective** — a collective (or collective-bearing closure,
+  e.g. a ``make_exchange`` product) under a ``lax.cond``/``lax.switch``
+  arm whose predicate is not provably shard-uniform, or under a
+  non-static python branch.  A shard that skips a ``ppermute`` round its
+  peer executes deadlocks the exchange (or silently corrupts it under
+  vmap simulation) — cf. Gebremedhin-style superstep schemes where every
+  round is globally agreed.
+- **nonuniform-loop** — a python loop over a non-static bound inside
+  device code (unrolls per-trace, defeating the PlanSignature program
+  cache — PR 6's bug class), or a ``lax.while_loop``/``fori_loop`` whose
+  body communicates but whose trip condition is not shard-uniform.
+
+All three consume the :class:`~repro.analysis.uniformity.Report` stream;
+the engine runs the analysis once per file and hands it to each rule.
+"""
+from __future__ import annotations
+
+import re
+
+from .findings import Finding
+
+HOT_PATH = re.compile(r"(^|/)(core|kernels)/")
+
+
+def _hot(ctx) -> bool:
+    return bool(HOT_PATH.search(ctx.path.replace("\\", "/")))
+
+
+def check_host_sync(ctx) -> list[Finding]:
+    if not _hot(ctx) or ctx.analysis is None:
+        return []
+    out = []
+    for r in ctx.analysis.reports:
+        if r.kind != "host-sync" or not r.device:
+            continue
+        out.append(Finding(
+            ctx.path, r.line, "host-sync",
+            f"host sync '{r.detail}(...)' on a traced value inside device "
+            f"code (blessed exit: comm.stats_to_host)"))
+    return out
+
+
+def check_divergent_collective(ctx) -> list[Finding]:
+    if ctx.analysis is None:
+        return []
+    out = []
+    for r in ctx.analysis.reports:
+        if not r.bearing:
+            continue
+        if r.kind in ("cond", "switch") and not r.pred.uniform:
+            out.append(Finding(
+                ctx.path, r.line, "divergent-collective",
+                f"collective under lax.{r.kind} whose predicate is not "
+                f"provably shard-uniform (derive it from a pmax/psum "
+                f"reduction or assert the contract via comm.shard_uniform)"))
+        elif r.kind == "if" and not r.pred.static:
+            out.append(Finding(
+                ctx.path, r.line, "divergent-collective",
+                f"collective under a python branch on a non-static value "
+                f"(shards may disagree; hoist the collective or make the "
+                f"branch static)"))
+    return out
+
+
+def check_nonuniform_loop(ctx) -> list[Finding]:
+    if ctx.analysis is None:
+        return []
+    out = []
+    for r in ctx.analysis.reports:
+        if r.kind == "pyloop" and r.device and not r.pred.static:
+            out.append(Finding(
+                ctx.path, r.line, "nonuniform-loop",
+                f"python loop over a non-static bound in device code "
+                f"(unrolls per trace and defeats the PlanSignature program "
+                f"cache; use lax.fori_loop/while_loop)"))
+        elif r.kind in ("while", "fori") and r.bearing and not r.pred.uniform:
+            what = ("trip condition" if r.kind == "while"
+                    else "trip bound")
+            out.append(Finding(
+                ctx.path, r.line, "nonuniform-loop",
+                f"lax.{r.kind}_loop body communicates but its {what} is not "
+                f"provably shard-uniform (pmax-reduce the bound so every "
+                f"shard runs the same number of collectives)"))
+    return out

@@ -1,0 +1,809 @@
+"""AST-level shard-uniformity dataflow for SPMD python sources.
+
+The SPMD invariant behind every collective in this repo (DESIGN.md §9):
+all shards must execute the *same* sequence of collectives with the same
+trip counts.  A value is **shard-uniform** when it is provably identical
+on every shard; only uniform values may steer a ``lax.cond`` arm or loop
+bound whose body communicates.
+
+The abstract value lattice per name is :class:`Val`:
+
+- ``static``  — a trace-time python value (config ints, tuples, shapes).
+  Static implies uniform.
+- ``uniform`` — a traced value identical across shards.  Sources:
+  statics, collective *reductions* (``psum``/``pmax``/``pmin``/
+  ``all_gather`` — their outputs are identical everywhere by
+  construction), and the explicit :func:`repro.core.comm.shard_uniform`
+  contract annotation.
+- neither    — per-shard data.  Sources: ``axis_index``/``comm.index()``,
+  ``ppermute`` outputs, and unannotated array parameters.
+
+The analysis is flow-sensitive and intra-procedural with three
+inter-procedural devices:
+
+- module-level functions get a memoized **strict summary**: return
+  uniformity computed with every parameter assumed per-shard.  A helper
+  that launders its result through ``pmax``/``psum`` (e.g.
+  ``recolor._needed_exchanges``) is therefore uniform at every call site.
+- locally *resolvable* callables (nested ``def``s, lambdas, loop bodies
+  handed to ``lax.while_loop``/``fori_loop``/``cond``/``switch``) are
+  analyzed inline with the caller's environment; loop carries iterate to
+  a fixpoint before reports are collected.
+- ``comm.make_exchange(...)`` results are modeled as collective-bearing
+  callables (the factory's closures ship ``ppermute``/``all_gather``).
+
+Parameters seed from annotations: array-ish annotations (``ndarray``,
+``Array``) are per-shard, any other annotation (``int``, ``tuple``,
+config dataclasses) is static, and unannotated parameters are per-shard —
+the conservative default that ``shard_uniform`` exists to override.
+
+While executing, the analyzer records :class:`Report`s at every branch /
+loop / host-sync site; the SPMD rules in ``rules_spmd.py`` turn reports
+into findings.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import dataclasses
+import re
+
+# Collectives whose *execution* must be shard-uniform (a shard skipping one
+# deadlocks or corrupts the exchange).  axis_index is excluded: reading the
+# shard id in one branch cannot desynchronize anything.
+COLLECTIVE_PRIMS = {"psum", "pmax", "pmin", "pmean", "all_gather",
+                    "ppermute", "pshuffle", "all_to_all"}
+# Collectives whose outputs are identical on every shard.
+UNIFORM_PRIMS = {"psum", "pmax", "pmin", "pmean", "all_gather"}
+# Primitives whose outputs are per-shard even from uniform inputs.
+DIVERGENT_PRIMS = {"ppermute", "pshuffle", "all_to_all", "axis_index"}
+# Known factories returning collective-bearing callables.
+BEARING_FACTORIES = {"make_exchange"}
+# Attributes that are static regardless of their base (shapes are trace-time
+# constants under jit).
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+# Builtins that preserve static-ness through plain python evaluation.
+STATIC_BUILTINS = {"len", "range", "zip", "enumerate", "tuple", "list",
+                   "set", "dict", "sorted", "reversed", "min", "max", "abs",
+                   "sum", "int", "float", "bool", "str", "isinstance",
+                   "getattr", "hasattr", "divmod", "round", "map", "filter",
+                   "frozenset", "repr", "any", "all", "print", "type"}
+ARRAYISH_ANN = re.compile(r"ndarray|Array|jnp\.|DeviceArray")
+# Host-sync calls that force a device->host transfer when fed a traced value.
+HOST_SYNC_CALLS = {"int", "float", "bool", "item", "asarray", "array",
+                   "device_get", "block_until_ready", "tolist"}
+HOST_SYNC_EXEMPT_FUNCS = {"stats_to_host"}   # the one blessed exit
+_MAX_DEPTH = 25
+# the lattice only descends (uniform/static bits can only turn off), so
+# carry fixpoints converge in a couple of steps
+_MAX_FIXPOINT = 4
+
+
+@dataclasses.dataclass
+class Val:
+    """Abstract value: (uniform, static) bits + callable/tuple structure."""
+
+    uniform: bool = False
+    static: bool = False
+    bearing: bool = False            # callable that executes collectives
+    node: ast.AST | None = None      # FunctionDef/Lambda for callables
+    env: dict | None = None          # closure environment (live reference)
+    elems: list | None = None        # element Vals for tuples/lists
+
+    def __post_init__(self):
+        if self.static:
+            self.uniform = True
+
+
+def VS() -> Val:
+    return Val(uniform=True, static=True)
+
+
+def VU() -> Val:
+    return Val(uniform=True, static=False)
+
+
+def VN() -> Val:
+    return Val(uniform=False, static=False)
+
+
+def meet(*vals: Val) -> Val:
+    """Pointwise AND of (uniform, static) — the result of combining values."""
+    vals = [v if isinstance(v, Val) else VN() for v in vals]
+    if not vals:
+        return VS()
+    return Val(uniform=all(v.uniform for v in vals),
+               static=all(v.static for v in vals))
+
+
+def join(a: Val, b: Val) -> Val:
+    """Control-flow merge: a value is uniform only if both paths agree."""
+    out = Val(uniform=a.uniform and b.uniform, static=a.static and b.static,
+              bearing=a.bearing or b.bearing)
+    if (a.elems is not None and b.elems is not None
+            and len(a.elems) == len(b.elems)):
+        out.elems = [join(x, y) for x, y in zip(a.elems, b.elems)]
+    if a.node is not None and a.node is b.node:
+        out.node, out.env = a.node, a.env
+    return out
+
+
+def same(a: Val, b: Val) -> bool:
+    if (a.uniform, a.static) != (b.uniform, b.static):
+        return False
+    ae, be = a.elems or [], b.elems or []
+    return len(ae) == len(be) and all(same(x, y) for x, y in zip(ae, be))
+
+
+@dataclasses.dataclass
+class Report:
+    """One analyzed control-flow / host-sync site, for the SPMD rules."""
+
+    kind: str          # "cond" | "switch" | "while" | "fori" | "if"
+                       # | "pyloop" | "host-sync"
+    line: int
+    pred: Val          # predicate / trip-bound value at the site
+    bearing: bool      # a collective executes under this site
+    device: bool       # site sits in traced (device) code
+    detail: str = ""
+
+
+def _sig(v: Val) -> tuple:
+    """Hashable abstract-value signature for the inline-call memo."""
+    elems = tuple(_sig(e) for e in v.elems) if v.elems is not None else None
+    return (v.uniform, v.static, v.bearing, id(v.node), elems)
+
+
+def _func_name(func: ast.AST) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _recv_name(func: ast.AST) -> str:
+    if isinstance(func, ast.Attribute):
+        if isinstance(func.value, ast.Name):
+            return func.value.id
+        if isinstance(func.value, ast.Attribute):
+            return func.value.attr
+    return ""
+
+
+def param_seed(arg: ast.arg) -> Val:
+    """Seed a parameter from its annotation (see module docstring)."""
+    if arg.annotation is not None:
+        ann = ast.unparse(arg.annotation)
+        return VN() if ARRAYISH_ANN.search(ann) else VS()
+    return VN()
+
+
+class ModuleAnalysis:
+    """Whole-module driver: canonical pass + strict per-function summaries."""
+
+    def __init__(self, tree: ast.Module, path: str = "<module>"):
+        self.tree = tree
+        self.path = path
+        self.funcs: dict[str, ast.FunctionDef] = {}
+        self.module_static: set[str] = set()
+        self.reports: list[Report] = []
+        self._strict: dict[str, Val] = {}
+        self._strict_stack: set[str] = set()
+        self._bearing_memo: dict[int, bool] = {}
+        self._call_memo: dict[tuple, Val] = {}
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.funcs[node.name] = node
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for alias in node.names:
+                    self.module_static.add(
+                        (alias.asname or alias.name).split(".")[0])
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            self.module_static.add(n.id)
+            elif isinstance(node, ast.AnnAssign) and isinstance(
+                    node.target, ast.Name):
+                self.module_static.add(node.target.id)
+            elif isinstance(node, ast.ClassDef):
+                self.module_static.add(node.name)
+
+    # -------------------------------------------------------------- passes --
+    def run(self) -> list[Report]:
+        """Canonical collecting pass over every module-level function."""
+        for f in self.funcs.values():
+            device = ((f.name.endswith("_spmd") or _is_jitted(f))
+                      and f.name not in HOST_SYNC_EXEMPT_FUNCS)
+            env = {a.arg: param_seed(a) for a in _all_args(f.args)}
+            FuncAnalyzer(self, env, device=device, collect=True).exec_body(
+                f.body)
+        return self.reports
+
+    def strict_summary(self, name: str) -> Val:
+        """Return uniformity of ``name`` with all params per-shard (memoized;
+        recursion breaks to per-shard)."""
+        if name in self._strict:
+            return self._strict[name]
+        if name in self._strict_stack:
+            return VN()
+        f = self.funcs.get(name)
+        if f is None:
+            return VN()
+        self._strict_stack.add(name)
+        try:
+            # arrays are per-shard; annotated scalars/configs keep their
+            # static seeding (an `int` param is a trace-time constant
+            # whoever the caller is)
+            env = {a.arg: param_seed(a) for a in _all_args(f.args)}
+            an = FuncAnalyzer(self, env, device=False, collect=False)
+            an.exec_body(f.body)
+            result = an.return_val()
+        finally:
+            self._strict_stack.discard(name)
+        self._strict[name] = result
+        return result
+
+    # ------------------------------------------------------------- bearing --
+    def is_bearing(self, node: ast.AST | None, env: dict | None = None,
+                   _seen: set | None = None) -> bool:
+        """Does calling/executing ``node`` run a collective primitive?"""
+        if node is None:
+            return False
+        key = id(node)
+        if key in self._bearing_memo:
+            return self._bearing_memo[key]
+        _seen = _seen or set()
+        if key in _seen:
+            return False
+        _seen.add(key)
+        found = False
+        for n in ast.walk(node):
+            if not isinstance(n, ast.Call):
+                continue
+            name = _func_name(n.func)
+            if name in COLLECTIVE_PRIMS:
+                found = True
+                break
+            if name in BEARING_FACTORIES:
+                found = True
+                break
+            target = env.get(name) if env else None
+            if isinstance(target, Val):
+                if target.bearing:
+                    found = True
+                    break
+                if target.node is not None and self.is_bearing(
+                        target.node, target.env, _seen):
+                    found = True
+                    break
+            elif name in self.funcs and self.is_bearing(
+                    self.funcs[name], None, _seen):
+                found = True
+                break
+        self._bearing_memo[key] = found
+        return found
+
+
+def _is_jitted(f: ast.FunctionDef) -> bool:
+    for dec in f.decorator_list:
+        if "jit" in ast.unparse(dec):
+            return True
+    return False
+
+
+def _all_args(a: ast.arguments) -> list[ast.arg]:
+    out = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+    if a.vararg:
+        out.append(a.vararg)
+    if a.kwarg:
+        out.append(a.kwarg)
+    return out
+
+
+class FuncAnalyzer:
+    """Flow-sensitive abstract interpreter for one function body."""
+
+    def __init__(self, mod: ModuleAnalysis, env: dict, device: bool,
+                 collect: bool, depth: int = 0):
+        self.mod = mod
+        self.env = env
+        self.device = device
+        self.collect = collect
+        self.depth = depth
+        self.returns: list[Val] = []
+
+    def report(self, kind: str, node: ast.AST, pred: Val, bearing: bool,
+               detail: str = "") -> None:
+        if self.collect:
+            self.mod.reports.append(Report(
+                kind=kind, line=getattr(node, "lineno", 0), pred=pred,
+                bearing=bearing, device=self.device, detail=detail))
+
+    def return_val(self) -> Val:
+        if not self.returns:
+            return VS()
+        out = self.returns[0]
+        for v in self.returns[1:]:
+            out = join(out, v)
+        return out
+
+    # ----------------------------------------------------------- statements --
+    def exec_body(self, stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            self.exec_stmt(st)
+
+    def exec_stmt(self, st: ast.stmt) -> None:
+        if isinstance(st, ast.Assign):
+            v = self.eval(st.value)
+            for t in st.targets:
+                self.assign(t, v)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                self.assign(st.target, self.eval(st.value))
+        elif isinstance(st, ast.AugAssign):
+            v = meet(self.eval(st.target), self.eval(st.value))
+            self.assign(st.target, v)
+        elif isinstance(st, ast.Return):
+            self.returns.append(
+                self.eval(st.value) if st.value is not None else VS())
+        elif isinstance(st, ast.If):
+            self.exec_if(st)
+        elif isinstance(st, (ast.For, ast.While)):
+            self.exec_pyloop(st)
+        elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.env[st.name] = Val(
+                uniform=False, static=False, node=st, env=self.env,
+                bearing=self.mod.is_bearing(st, self.env))
+        elif isinstance(st, ast.Expr):
+            self.eval(st.value)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                v = self.eval(item.context_expr)
+                if item.optional_vars is not None:
+                    self.assign(item.optional_vars, v)
+            self.exec_body(st.body)
+        elif isinstance(st, ast.Try):
+            self.exec_body(st.body)
+            for h in st.handlers:
+                self.exec_body(h.body)
+            self.exec_body(st.orelse)
+            self.exec_body(st.finalbody)
+        elif isinstance(st, (ast.Assert, ast.Raise, ast.Delete)):
+            for n in ast.iter_child_nodes(st):
+                if isinstance(n, ast.expr):
+                    self.eval(n)
+        # Pass / Import / Global / Break / Continue: nothing to track
+
+    def assign(self, target: ast.expr, v: Val) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = v
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            elems = v.elems
+            if elems is None or len(elems) != len(target.elts):
+                elems = [Val(uniform=v.uniform, static=v.static)
+                         for _ in target.elts]
+            for t, e in zip(target.elts, elems):
+                if isinstance(t, ast.Starred):
+                    self.assign(t.value, Val(uniform=v.uniform,
+                                             static=v.static))
+                else:
+                    self.assign(t, e)
+        elif isinstance(target, (ast.Subscript, ast.Attribute)):
+            base = target.value
+            while isinstance(base, (ast.Subscript, ast.Attribute)):
+                base = base.value
+            if isinstance(base, ast.Name) and base.id in self.env:
+                self.env[base.id] = join(self.env[base.id], v)
+
+    def exec_if(self, st: ast.If) -> None:
+        test = self.eval(st.test)
+        bearing = any(self.mod.is_bearing(s, self.env)
+                      for s in st.body + st.orelse)
+        self.report("if", st, test, bearing)
+        before = dict(self.env)
+        self.env = dict(before)
+        self.exec_body(st.body)
+        s1 = self.env
+        self.env = dict(before)
+        self.exec_body(st.orelse)
+        s2 = self.env
+        merged = dict(before)
+        for name in set(s1) | set(s2):
+            a = s1.get(name, before.get(name, VN()))
+            b = s2.get(name, before.get(name, VN()))
+            merged[name] = join(a, b)
+        self.env = merged
+
+    def exec_pyloop(self, st: ast.For | ast.While) -> None:
+        if isinstance(st, ast.For):
+            it = self.eval(st.iter)
+            self.assign(st.target, Val(uniform=it.uniform, static=it.static))
+            bound = it
+        else:
+            bound = self.eval(st.test)
+        bearing = any(self.mod.is_bearing(s, self.env) for s in st.body)
+        self.report("pyloop", st, bound, bearing)
+        # two merge passes approximate the loop fixpoint
+        for _ in range(2):
+            before = dict(self.env)
+            self.exec_body(st.body)
+            for name, v in list(self.env.items()):
+                if name in before:
+                    self.env[name] = join(before[name], v)
+        self.exec_body(st.orelse)
+
+    # ---------------------------------------------------------- expressions --
+    def eval(self, node: ast.expr | None) -> Val:
+        if node is None:
+            return VS()
+        if isinstance(node, ast.Constant):
+            return VS()
+        if isinstance(node, ast.Name):
+            if node.id in self.env:
+                return self.env[node.id]
+            if node.id in self.mod.funcs:
+                f = self.mod.funcs[node.id]
+                return Val(node=f, env=None,
+                           bearing=self.mod.is_bearing(f))
+            if (node.id in self.mod.module_static
+                    or node.id in STATIC_BUILTINS
+                    or hasattr(builtins, node.id)):
+                return VS()
+            return VN()
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return VS()
+            base = self.eval(node.value)
+            return Val(uniform=base.uniform, static=base.static,
+                       bearing=base.bearing)
+        if isinstance(node, ast.Subscript):
+            base = self.eval(node.value)
+            idx = self.eval(node.slice)
+            if (base.elems is not None and isinstance(node.slice, ast.Constant)
+                    and isinstance(node.slice.value, int)
+                    and -len(base.elems) <= node.slice.value
+                    < len(base.elems)):
+                return base.elems[node.slice.value]
+            return meet(base, idx)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            elems = [self.eval(e) for e in node.elts]
+            v = meet(*elems) if elems else VS()
+            return Val(uniform=v.uniform, static=v.static, elems=elems)
+        if isinstance(node, ast.Dict):
+            vals = ([self.eval(k) for k in node.keys if k is not None]
+                    + [self.eval(v) for v in node.values])
+            return meet(*vals) if vals else VS()
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is a python-static property:
+            # tracers are never None, so the branch is resolved at trace time.
+            if (len(node.ops) == 1 and isinstance(node.ops[0],
+                                                  (ast.Is, ast.IsNot))
+                    and any(isinstance(s, ast.Constant) and s.value is None
+                            for s in (node.left, node.comparators[0]))):
+                self.eval(node.left)
+                self.eval(node.comparators[0])
+                return VS()
+            return meet(self.eval(node.left),
+                        *[self.eval(c) for c in node.comparators])
+        if isinstance(node, ast.BoolOp):
+            return meet(*[self.eval(v) for v in node.values])
+        if isinstance(node, ast.BinOp):
+            return meet(self.eval(node.left), self.eval(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.eval(node.operand)
+        if isinstance(node, ast.IfExp):
+            return meet(self.eval(node.test),
+                        join(self.eval(node.body), self.eval(node.orelse)))
+        if isinstance(node, ast.Lambda):
+            return Val(node=node, env=self.env,
+                       bearing=self.mod.is_bearing(node, self.env))
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            return self.eval_comp(node)
+        if isinstance(node, ast.Call):
+            return self.eval_call(node)
+        if isinstance(node, ast.JoinedStr):
+            return meet(*[self.eval(v.value) for v in node.values
+                          if isinstance(v, ast.FormattedValue)] or [VS()])
+        if isinstance(node, ast.Slice):
+            return meet(self.eval(node.lower), self.eval(node.upper),
+                        self.eval(node.step))
+        return VN()
+
+    def eval_comp(self, node) -> Val:
+        env0 = dict(self.env)
+        parts = []
+        for gen in node.generators:
+            it = self.eval(gen.iter)
+            parts.append(it)
+            self.assign(gen.target, Val(uniform=it.uniform, static=it.static))
+            parts.extend(self.eval(c) for c in gen.ifs)
+        if isinstance(node, ast.DictComp):
+            elt = meet(self.eval(node.key), self.eval(node.value))
+        else:
+            elt = self.eval(node.elt)
+        # a comprehension of lambdas is a branch table: propagate bearing
+        bearing = (isinstance(getattr(node, "elt", None), ast.Lambda)
+                   and self.mod.is_bearing(node.elt, self.env))
+        self.env = env0
+        v = meet(elt, *parts)
+        return Val(uniform=v.uniform, static=v.static, bearing=bearing)
+
+    # ---------------------------------------------------------------- calls --
+    def eval_call(self, node: ast.Call) -> Val:
+        name = _func_name(node.func)
+        recv = _recv_name(node.func)
+
+        if name in ("cond",) and recv in ("lax", "jax"):
+            return self.eval_lax_cond(node)
+        if name == "switch" and recv in ("lax", "jax"):
+            return self.eval_lax_switch(node)
+        if name == "while_loop" and recv in ("lax", "jax"):
+            return self.eval_lax_while(node)
+        if name == "fori_loop" and recv in ("lax", "jax"):
+            return self.eval_lax_fori(node)
+        if name == "scan" and recv in ("lax", "jax"):
+            return self.eval_lax_scan(node)
+
+        arg_vals = [self.eval(a) for a in node.args]
+        kw_vals = [self.eval(k.value) for k in node.keywords]
+
+        if name == "shard_uniform":
+            a = arg_vals[0] if arg_vals else VS()
+            return Val(uniform=True, static=a.static)
+        if name in UNIFORM_PRIMS:
+            return VU()
+        if name in DIVERGENT_PRIMS:
+            return VN()
+        if name == "index" and recv == "comm":          # comm.index()
+            return VN()
+        if name in BEARING_FACTORIES:
+            return Val(bearing=True)
+        if self.device and name in HOST_SYNC_CALLS:
+            self.check_host_sync(node, name, arg_vals)
+
+        # resolvable local callable -> inline analysis
+        target = None
+        if isinstance(node.func, ast.Name):
+            target = self.env.get(node.func.id)
+        if isinstance(target, Val) and target.node is not None:
+            return self.call_callable(target, arg_vals, node)
+        # module-level function -> strict summary
+        if isinstance(node.func, ast.Name) and node.func.id in self.mod.funcs:
+            return self.mod.strict_summary(node.func.id)
+
+        base = self.eval(node.func) if isinstance(node.func,
+                                                  ast.Attribute) else VS()
+        v = meet(base, *(arg_vals + kw_vals))
+        if name in STATIC_BUILTINS and isinstance(node.func, ast.Name):
+            if name == "len":
+                return VS()      # sizes are trace-time constants under jit
+            return v
+        # any other call on static inputs yields a traced (uniform) value
+        return Val(uniform=v.uniform, static=False)
+
+    def check_host_sync(self, node: ast.Call, name: str, arg_vals) -> None:
+        if name in ("int", "float", "bool") and not isinstance(node.func,
+                                                               ast.Name):
+            return
+        if name in ("item", "tolist", "block_until_ready"):
+            if not isinstance(node.func, ast.Attribute):
+                return
+            arg_vals = [self.eval(node.func.value)]
+        if name in ("asarray", "array"):
+            # only numpy's asarray/array forces a host transfer
+            if _recv_name(node.func) not in ("np", "numpy", "onp"):
+                return
+        if name == "device_get" and _recv_name(node.func) not in (
+                "jax", "api"):
+            return
+        if all(v.static for v in arg_vals):
+            return               # int(x.shape[0]) etc: trace-time constants
+        self.report("host-sync", node, meet(*arg_vals) if arg_vals else VS(),
+                    bearing=False, detail=name)
+
+    def call_callable(self, target: Val, arg_vals: list[Val],
+                      site: ast.Call | None) -> Val:
+        if self.depth >= _MAX_DEPTH:
+            return VN()
+        memo_key = None
+        if site is None or not site.keywords:
+            memo_key = (id(target.node), id(target.env), self.device,
+                        tuple(_sig(v) for v in arg_vals))
+            hit = self.mod._call_memo.get(memo_key)
+            if hit is not None:
+                return hit
+        fn = target.node
+        env = dict(target.env) if target.env is not None else {}
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            args = fn.args
+            params = list(args.posonlyargs) + list(args.args)
+            inner = FuncAnalyzer(self.mod, env, device=self.device,
+                                 collect=False, depth=self.depth + 1)
+            # bind positional args, then defaults for the rest
+            defaults = list(args.defaults)
+            n_no_default = len(params) - len(defaults)
+            for i, p in enumerate(params):
+                if i < len(arg_vals):
+                    env[p.arg] = arg_vals[i]
+                elif i >= n_no_default:
+                    env[p.arg] = inner.eval(defaults[i - n_no_default])
+                else:
+                    env[p.arg] = param_seed(p)
+            # bind keyword args from the call site
+            if site is not None:
+                by_name = {p.arg: p for p in params}
+                for kw in site.keywords:
+                    if kw.arg in by_name:
+                        env[kw.arg] = self.eval(kw.value)
+            if isinstance(fn, ast.Lambda):
+                out = inner.eval(fn.body)
+            else:
+                inner.exec_body(fn.body)
+                out = inner.return_val()
+            if memo_key is not None:
+                self.mod._call_memo[memo_key] = out
+            return out
+        return VN()
+
+    def resolve_callable(self, expr: ast.expr) -> Val:
+        v = self.eval(expr)
+        if v.node is None and isinstance(expr, ast.Name):
+            f = self.mod.funcs.get(expr.id)
+            if f is not None:
+                return Val(node=f, env=None, bearing=self.mod.is_bearing(f))
+        return v
+
+    def _branch_call(self, branch: Val, arg_vals: list[Val]) -> Val:
+        if branch.node is not None:
+            # device: lax-traced bodies are device code by definition
+            prev, self.device = self.device, True
+            try:
+                return self.call_callable(branch, arg_vals, None)
+            finally:
+                self.device = prev
+        return VN()
+
+    def _traced_child(self, target: Val, arg_vals: list[Val],
+                      collect: bool) -> "FuncAnalyzer | None":
+        """Analyze a lax-traced callable with explicit arg seeds, returning
+        the child analyzer (device=True).  None if unresolvable."""
+        fn = target.node
+        if fn is None:
+            return None
+        env = dict(target.env) if target.env is not None else {}
+        args = fn.args
+        params = list(args.posonlyargs) + list(args.args)
+        inner = FuncAnalyzer(self.mod, env, device=True,
+                             collect=collect, depth=self.depth + 1)
+        for i, p in enumerate(params):
+            env[p.arg] = arg_vals[i] if i < len(arg_vals) else VN()
+        if isinstance(fn, ast.Lambda):
+            inner.returns.append(inner.eval(fn.body))
+        else:
+            inner.exec_body(fn.body)
+        return inner
+
+    def eval_lax_cond(self, node: ast.Call) -> Val:
+        if not node.args:
+            return VN()
+        pred = self.eval(node.args[0])
+        branches = [self.resolve_callable(b) for b in node.args[1:3]]
+        operands = [self.eval(a) for a in node.args[3:]]
+        bearing = any(b.bearing or self.mod.is_bearing(b.node, b.env)
+                      for b in branches)
+        self.report("cond", node, pred, bearing)
+        results = [self._branch_call(b, operands) for b in branches
+                   if b.node is not None]
+        if len(results) == len(branches) and results:
+            out = results[0]
+            for r in results[1:]:
+                out = join(out, r)
+            return meet_structured(pred, out)
+        return meet(pred, *operands)
+
+    def eval_lax_switch(self, node: ast.Call) -> Val:
+        if len(node.args) < 2:
+            return VN()
+        pred = self.eval(node.args[0])
+        table = self.eval(node.args[1])
+        bearing = table.bearing
+        if isinstance(node.args[1], (ast.List, ast.Tuple)):
+            resolved = [self.resolve_callable(e) for e in node.args[1].elts]
+            bearing = bearing or any(
+                b.bearing or self.mod.is_bearing(b.node, b.env)
+                for b in resolved)
+        self.report("switch", node, pred, bearing)
+        operands = [self.eval(a) for a in node.args[2:]]
+        return meet(pred, *operands)
+
+    def eval_lax_while(self, node: ast.Call) -> Val:
+        if len(node.args) < 3:
+            return VN()
+        cond_fn = self.resolve_callable(node.args[0])
+        body_fn = self.resolve_callable(node.args[1])
+        carry = self.eval(node.args[2])
+        bearing = body_fn.bearing or self.mod.is_bearing(body_fn.node,
+                                                         body_fn.env)
+        carry = self._carry_fixpoint(body_fn, carry, index=None)
+        cond_child = self._traced_child(cond_fn, [carry], collect=False)
+        cond_v = cond_child.return_val() if cond_child is not None else VN()
+        self.report("while", node, cond_v, bearing)
+        if self.collect:   # one collecting pass at the fixpoint
+            self._traced_child(body_fn, [carry], collect=True)
+            self._traced_child(cond_fn, [carry], collect=True)
+        return carry
+
+    def eval_lax_fori(self, node: ast.Call) -> Val:
+        if len(node.args) < 4:
+            return VN()
+        lo, hi = self.eval(node.args[0]), self.eval(node.args[1])
+        body_fn = self.resolve_callable(node.args[2])
+        carry = self.eval(node.args[3])
+        bearing = body_fn.bearing or self.mod.is_bearing(body_fn.node,
+                                                         body_fn.env)
+        bound = meet(lo, hi)
+        self.report("fori", node, bound, bearing)
+        carry = self._carry_fixpoint(body_fn, carry,
+                                     index=Val(uniform=bound.uniform))
+        if self.collect:
+            self._traced_child(body_fn, [Val(uniform=bound.uniform), carry],
+                               collect=True)
+        return carry
+
+    def eval_lax_scan(self, node: ast.Call) -> Val:
+        args = [self.eval(a) for a in node.args]
+        if len(node.args) >= 2:
+            body_fn = self.resolve_callable(node.args[0])
+            bearing = body_fn.bearing or self.mod.is_bearing(
+                body_fn.node, body_fn.env)
+            # scan's trip count is the xs length — static — so only flag
+            # nothing here; carries still degrade through the fixpoint.
+            carry = args[1] if len(args) > 1 else VN()
+            xs = VN()
+            out = self._carry_fixpoint(body_fn, carry, index=xs, scan=True)
+            if self.collect:
+                self._traced_child(body_fn, [out, xs], collect=True)
+            return out
+        return meet(*args) if args else VN()
+
+    def _carry_fixpoint(self, body_fn: Val, carry: Val, index: Val | None,
+                        scan: bool = False) -> Val:
+        if body_fn.node is None:
+            return VN()
+        for _ in range(_MAX_FIXPOINT):
+            call_args = [carry] if index is None else [index, carry]
+            if scan:
+                call_args = [carry, index]
+            child = self._traced_child(body_fn, call_args, collect=False)
+            if child is None:
+                return VN()
+            ret = child.return_val()
+            if scan and ret.elems:
+                ret = ret.elems[0]
+            new = join(carry, ret)
+            if same(new, carry):
+                return new
+            carry = new
+        return carry
+
+
+def meet_structured(guard: Val, v: Val) -> Val:
+    """meet() that degrades tuple elements by a guard without flattening."""
+    if v.elems is None:
+        return meet(guard, v)
+    return Val(uniform=guard.uniform and v.uniform,
+               static=guard.static and v.static,
+               elems=[meet_structured(guard, e) for e in v.elems])
+
+
+def analyze_module(source: str, path: str = "<module>") -> ModuleAnalysis:
+    """Parse + run the canonical collecting pass; returns the analysis."""
+    tree = ast.parse(source, filename=path)
+    mod = ModuleAnalysis(tree, path)
+    mod.run()
+    return mod

@@ -104,6 +104,21 @@ class AxisComm:
         return jax.lax.axis_index(self.axis)
 
 
+def shard_uniform(x):
+    """Identity marker: assert-by-contract that ``x`` is shard-uniform.
+
+    Some values are uniform by *contract* rather than by construction — a
+    round mask computed from a pmax-reduced schedule and passed down as a
+    plain parameter, or a class count every caller derives from globally
+    psum-reduced sizes.  Wrapping them in ``shard_uniform`` documents the
+    contract at the consumption site and lets repro-lint's
+    ``divergent-collective``/``nonuniform-loop`` rules (DESIGN.md §9)
+    treat the value as uniform instead of demanding a redundant collective.
+    It compiles to nothing (returns its argument unchanged).
+    """
+    return x
+
+
 def allgather_bytes_per_exchange(P_size: int, max_boundary: int,
                                  itemsize: int = 4) -> int:
     """Per-shard wire bytes of one broadcast exchange (ring all-gather:
@@ -139,8 +154,14 @@ def stats_to_host(stats) -> dict:
     Works for 0-d scalars, per-shard ``(P,)`` stacks from ``run_sim`` and
     sharded outputs alike: every stat is either shard-uniform (schedules are
     pmax-reduced) or a quantity whose shard-max is the meaningful summary.
+
+    This is the pipeline's *single* blessed device->host exit (repro-lint's
+    ``host-sync`` rule, DESIGN.md §9): the shard-maxes are launched async on
+    device and the whole dict crosses in one ``device_get``, not one
+    blocking ``int()`` per stat.
     """
-    return {k: int(jnp.max(v)) for k, v in stats.items()}
+    host = jax.device_get({k: jnp.max(v) for k, v in stats.items()})
+    return {k: int(v) for k, v in host.items()}
 
 
 def run_sim(fn, P_size: int, sharded_args: tuple, broadcast_args: tuple = ()):
@@ -223,6 +244,11 @@ def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
     """
     n_ghost_slots = view.shape[0] - n_local_max - 1
     ghosts = jax.lax.dynamic_slice(view, (n_local_max,), (n_ghost_slots,))
+    # contract: the round mask comes out of the pmax-reduced piggyback
+    # schedule (recolor._needed_exchange_rounds), so every shard agrees on
+    # which ppermute rounds run — a shard skipping a round its peer
+    # executes would deadlock the exchange.
+    round_mask = shard_uniform(round_mask)
     total = jnp.int32(0)
     for r, (k, w) in enumerate(zip(shifts, widths)):
         perm = [(i, (i + k) % P_size) for i in range(P_size)]

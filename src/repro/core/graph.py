@@ -83,6 +83,31 @@ class Graph:
         return int((c > 0).sum())
 
 
+#: every device index array (slots, vids, ELL neighbours) is int32.
+INT32_LIMIT = 2**31
+
+
+def check_int32_limits(n_global: int, n_local_max: int, maxd: int,
+                       maxd2: int = 0) -> None:
+    """Raise before any int32 device index can overflow (DESIGN.md §9).
+
+    Pure shape arithmetic — callable (and testable) without allocating the
+    arrays it protects.  Two hazards: global vertex ids (``gvid``,
+    ``indices`` are int32) and the flattened ELL index ``v * maxd + k``
+    the selection kernels compute per shard.
+    """
+    if n_global >= INT32_LIMIT:
+        raise ValueError(
+            f"graph has {n_global} vertices but device vertex ids are "
+            f"int32 (< {INT32_LIMIT}); this exceeds the supported size")
+    ell = n_local_max * max(maxd, maxd2, 1)
+    if ell >= INT32_LIMIT:
+        raise ValueError(
+            f"int32 ELL overflow: n_local_max * maxd = {n_local_max} * "
+            f"{max(maxd, maxd2, 1)} = {ell} >= {INT32_LIMIT}; partition "
+            f"over more workers (larger P) to shrink the per-shard tile")
+
+
 def _pad2(rows: list[np.ndarray], width: int, fill: int) -> np.ndarray:
     out = np.full((len(rows), width), fill, dtype=np.int32)
     for i, r in enumerate(rows):
@@ -458,6 +483,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     # ELL form of the same adjacency: nbr[p, v, k] = k-th neighbour slot of v,
     # padded with the sentinel (color 0, ignored by the selection kernels).
     maxd = max(1, max(int(r.max(initial=0)) for r in rows_indptr))
+    check_int32_limits(g.n, n_local_max, maxd)  # before the ELL allocation
     nbr = np.full((P, n_local_max, maxd), sentinel, dtype=np.int32)
     for p in range(P):
         deg_p = rows_indptr[p].astype(np.int64)
@@ -486,6 +512,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
             cnt = np.bincount(row2, minlength=1)
             maxd2 = max(maxd2, int(cnt.max(initial=0)))
         maxd2 = max(1, maxd2)
+        check_int32_limits(g.n, n_local_max, maxd, maxd2)
         nbr2 = np.full((P, n_local_max, maxd2), sentinel, dtype=np.int32)
         for p in range(P):
             row2, slot2 = slot2_rows[p]

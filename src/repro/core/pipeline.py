@@ -485,7 +485,8 @@ def recolor_loop_sim(pg: PartitionedGraph, view, cfg: PipelineConfig,
 
     view, hist, n_run = _PROGRAMS.get(sig, build)(arrs, jnp.asarray(view),
                                                   key)
-    return view, _history_to_host(hist), int(np.max(np.asarray(n_run)))
+    hist, n_run = jax.device_get((hist, n_run))     # one host transfer
+    return view, _history_to_host(hist), int(np.max(n_run))
 
 
 def _keys(cfg: PipelineConfig, color_key, recolor_key):
@@ -497,9 +498,13 @@ def _keys(cfg: PipelineConfig, color_key, recolor_key):
 
 
 def _pipeline_result(view, cstats, hist, n_run):
-    return view, dict(color=stats_to_host(cstats),
+    # shard-max the stats on device, then cross to the host once: stats,
+    # history and iteration count ride a single device_get
+    cmax = {k: jnp.max(v) for k, v in cstats.items()}
+    cmax, hist, n_run = jax.device_get((cmax, hist, n_run))
+    return view, dict(color={k: int(v) for k, v in cmax.items()},
                       history=_history_to_host(hist),
-                      n_iters_run=int(np.max(np.asarray(n_run))))
+                      n_iters_run=int(np.max(n_run)))
 
 
 def pipeline_sim(pg: PartitionedGraph, order, cfg: PipelineConfig, *,
@@ -664,10 +669,8 @@ def _bucket_inputs(bucket, cfg, orders, marked, cks, rks, pad_batch):
 
 def _unpack_bucket(out, bucket, bi, pgs, results):
     """(B, P, ...) batch outputs -> per-graph result dicts (input order)."""
-    view, cstats, hist, n_run = out
-    view, hist = np.asarray(view), np.asarray(hist)
-    n_run = np.asarray(n_run)
-    cstats = {k: np.asarray(v) for k, v in cstats.items()}
+    # every per-graph output crosses to the host in one device_get
+    view, cstats, hist, n_run = jax.device_get(out)
     for j, gi in enumerate(bucket.indices):
         v = view[j]
         results[gi] = dict(

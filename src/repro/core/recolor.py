@@ -62,7 +62,8 @@ from repro.kernels import ops
 
 from .comm import (AUTO, AXIS, DEFAULT_SCHEME, SCHEME_CHOICES, SCHEMES,
                    SPARSE, AxisComm, CommConfig, exchange_boundary,
-                   make_exchange, run_sharded, run_sim, stats_to_host)
+                   make_exchange, run_sharded, run_sim, shard_uniform,
+                   stats_to_host)
 from .graph import PartitionedGraph
 from .speculative import (ColorConfig, _compact_order, _plan_static,
                           color_spmd, resolve_cfg, validate_color_bounds)
@@ -229,12 +230,15 @@ def _dep_sources(step_of, arrs, n_local_max, distance):
     return deps
 
 
-def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
+def _needed_exchanges(step_of, arrs, n_local_max: int, K, max_colors: int,
                       comm: AxisComm, piggyback: bool, distance: int = 1):
     """The piggybacking schedule: needed[t] = exchange event after step t.
 
     Entry K is the end-of-iteration exchange (always on).
     """
+    # contract: K is the class count, psum-derived by every caller
+    # (class_sizes), so the exchange schedule is shard-agreed
+    K = shard_uniform(K)
     if piggyback:
         needed = jnp.zeros((max_colors + 1,), bool)
         for dep, s_v, _ in _dep_sources(step_of, arrs, n_local_max, distance):
@@ -248,9 +252,9 @@ def _needed_exchanges(step_of, arrs, n_local_max, K, max_colors,
     return needed
 
 
-def _needed_exchange_rounds(step_of, arrs, n_local_max, K, max_colors,
-                            comm: AxisComm, piggyback: bool, P_size: int,
-                            n_rounds: int, distance: int = 1):
+def _needed_exchange_rounds(step_of, arrs, n_local_max: int, K,
+                            max_colors: int, comm: AxisComm, piggyback: bool,
+                            P_size: int, n_rounds: int, distance: int = 1):
     """Sparse piggybacking: needed[t, r] = ``ppermute`` round r after step t.
 
     The paper's pre-communication ("who receives at which step") refined per
@@ -260,6 +264,7 @@ def _needed_exchange_rounds(step_of, arrs, n_local_max, K, max_colors,
     ``max_colors`` (end of iteration) runs every round — it leaves all
     ghosts fresh for the next iteration.
     """
+    K = shard_uniform(K)             # same contract as _needed_exchanges
     if piggyback:
         needed = jnp.zeros((max_colors + 1, max(n_rounds, 1)), bool)
         for dep, s_v, gi in _dep_sources(step_of, arrs, n_local_max, distance):
@@ -302,6 +307,10 @@ def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
     sparse scheme (the drivers thread them automatically).
     """
     comm = AxisComm()
+    # contract: callers derive n_classes from psum-reduced class sizes, so
+    # the per-class chunk schedule (and with it every exchange event) is
+    # identical on all shards
+    n_classes = shard_uniform(n_classes)
     n_local_max = arrs["indptr"].shape[0] - 1
     n_slots = arrs["prio"].shape[0]
     n_local = arrs["n_local"]

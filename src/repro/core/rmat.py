@@ -89,7 +89,10 @@ def grid2d(rows: int, cols: int, stencil: int = 9) -> Graph:
     assert stencil in (5, 9)
     n = rows * cols
     ii, jj = np.meshgrid(np.arange(rows), np.arange(cols), indexing="ij")
-    vid = (ii * cols + jj).ravel()
+    # promote at the packing site: id * size + id wraps at 2**31 if the
+    # operands ride on int32 (NEP 50 keeps the array dtype against python
+    # ints) — cf. the former u*n+v dedup-key overflow, PR 3
+    vid = (ii.astype(np.int64) * cols + jj).ravel()
     offsets = [(-1, 0), (1, 0), (0, -1), (0, 1)]
     if stencil == 9:
         offsets += [(-1, -1), (-1, 1), (1, -1), (1, 1)]
@@ -98,7 +101,7 @@ def grid2d(rows: int, cols: int, stencil: int = 9) -> Graph:
         ni, nj = ii + di, jj + dj
         ok = (ni >= 0) & (ni < rows) & (nj >= 0) & (nj < cols)
         srcs.append(vid[ok.ravel()])
-        dsts.append((ni * cols + nj).ravel()[ok.ravel()])
+        dsts.append((ni.astype(np.int64) * cols + nj).ravel()[ok.ravel()])
     return _edges_to_graph(n, np.concatenate(srcs).astype(np.int32),
                            np.concatenate(dsts).astype(np.int32))
 
@@ -107,7 +110,7 @@ def grid3d(nx: int, ny: int, nz: int) -> Graph:
     """3D grid, 27-point stencil — structural-engineering-mesh stand-in."""
     n = nx * ny * nz
     ii, jj, kk = np.meshgrid(np.arange(nx), np.arange(ny), np.arange(nz), indexing="ij")
-    vid = (ii * ny * nz + jj * nz + kk).ravel()
+    vid = (ii.astype(np.int64) * ny * nz + jj * nz + kk).ravel()
     srcs, dsts = [], []
     for di in (-1, 0, 1):
         for dj in (-1, 0, 1):
@@ -118,7 +121,8 @@ def grid3d(nx: int, ny: int, nz: int) -> Graph:
                 ok = ((ni >= 0) & (ni < nx) & (nj >= 0) & (nj < ny)
                       & (nk >= 0) & (nk < nz))
                 srcs.append(vid[ok.ravel()])
-                dsts.append((ni * ny * nz + nj * nz + nk).ravel()[ok.ravel()])
+                dsts.append((ni.astype(np.int64) * ny * nz + nj * nz
+                             + nk).ravel()[ok.ravel()])
     return _edges_to_graph(n, np.concatenate(srcs).astype(np.int32),
                            np.concatenate(dsts).astype(np.int32))
 
@@ -145,8 +149,10 @@ def geometric(n: int, avg_deg: float = 24.0, seed: int = 0,
     cell = r
     grid_n = max(int(1.0 / cell), 1)
     cid = np.minimum((pts / cell).astype(np.int64), grid_n - 1)
-    key = cid[:, 0] * grid_n + cid[:, 1] if dims == 2 else (
-        (cid[:, 0] * grid_n + cid[:, 1]) * grid_n + cid[:, 2])
+    # promote at the packing site (PR 3): the cell key must not wrap int32
+    key = cid[:, 0].astype(np.int64) * grid_n + cid[:, 1] if dims == 2 else (
+        (cid[:, 0].astype(np.int64) * grid_n + cid[:, 1]) * grid_n
+        + cid[:, 2])
     order = np.argsort(key)
     srcs, dsts = [], []
     offsets = ([(i, j) for i in (-1, 0, 1) for j in (-1, 0, 1)] if dims == 2

@@ -1,0 +1,32 @@
+"""NEGATIVE divergent-collective fixtures: nothing here may fire."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import shard_uniform
+
+
+def pmax_gated_exchange_spmd(view, comm):
+    # predicate is a collective reduction: every shard agrees
+    pending = comm.pmax(jnp.any(view > 0))
+    ex = lambda v: comm.psum(v)
+    return jax.lax.cond(pending, ex, lambda v: v, view)
+
+
+def contract_gated_exchange_spmd(view, round_mask, comm):
+    # uniformity asserted by contract at the consumption site
+    round_mask = shard_uniform(round_mask)
+    ex = lambda v: comm.psum(v)
+    return jax.lax.cond(round_mask[0], ex, lambda v: v, view)
+
+
+def divergent_pure_branch_spmd(view, comm):
+    # divergent predicate but no collective under it: allowed
+    mine = comm.index() == 0
+    return jax.lax.cond(mine, lambda v: v + 1, lambda v: v, view)
+
+
+def static_python_branch_spmd(view, cfg: "RecolorConfig", comm):
+    # python branch on a static config value around a collective: allowed
+    if cfg.use_psum:
+        view = comm.psum(view)
+    return view

@@ -1,0 +1,24 @@
+"""POSITIVE divergent-collective fixtures: every marked line must fire."""
+import jax
+import jax.numpy as jnp
+
+
+def shard_gated_exchange_spmd(view, comm):
+    # predicate derives from the shard id -> shards disagree on the psum
+    mine = comm.index() == 0
+    ex = lambda v: comm.psum(v)
+    return jax.lax.cond(mine, ex, lambda v: v, view)        # FIRE
+
+
+def data_gated_exchange_spmd(view, comm):
+    # predicate derives from per-shard data with no reduction
+    pending = jnp.any(view > 0)
+    ex = lambda v: comm.psum(v)
+    return jax.lax.cond(pending, ex, lambda v: v, view)     # FIRE
+
+
+def ppermute_derived_pred_spmd(view, comm, perm):
+    # ppermute outputs are per-shard even from uniform inputs
+    got = comm.ppermute(view, perm)
+    ex = lambda v: comm.psum(v)
+    return jax.lax.cond(jnp.any(got > 0), ex, lambda v: v, view)  # FIRE

@@ -1,0 +1,21 @@
+"""NEGATIVE host-sync fixtures (linted under a virtual core/ path)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def stats_to_host(stats):
+    # the one blessed exit: this function IS the host boundary
+    return {k: int(jnp.max(v)) for k, v in stats.items()}
+
+
+def static_shapes_spmd(view, arrs):
+    n_local_max = int(view.shape[0])        # trace-time constant: fine
+    width = len(arrs)                       # python size: fine
+    return jnp.zeros((n_local_max, width))
+
+
+def host_driver(pg, cfg):
+    # not device code (no _spmd suffix, nothing handed to lax): a driver
+    # may sync freely once the device program has returned
+    out = np.asarray(pg)
+    return int(out.max())

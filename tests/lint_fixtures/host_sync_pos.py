@@ -1,0 +1,17 @@
+"""POSITIVE host-sync fixtures (linted under a virtual core/ path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaky_spmd(view, comm):
+    total = jnp.sum(view)
+    n = int(total)                          # FIRE: traced -> python int
+    host = np.asarray(view)                 # FIRE: device -> host transfer
+    return n, host
+
+
+def loop_body_sync_spmd(view):
+    def body(i, acc):
+        return acc + view[i].item()         # FIRE: .item() inside fori body
+    return jax.lax.fori_loop(0, 4, body, 0.0)

@@ -1,0 +1,23 @@
+"""NEGATIVE id-overflow fixtures: nothing here may fire."""
+import numpy as np
+
+
+def promoted_packing(u, v, n):
+    return u.astype(np.int64) * n + v       # explicit 64-bit promotion
+
+
+def promoted_call(u, v, n):
+    return np.int64(u) * n + v
+
+
+def promoted_dtype_kw(v, n, m):
+    base = np.arange(m, dtype=np.int64)
+    return base * n + v.astype(np.int64)
+
+
+def size_by_size(n_local_max, maxd, n):
+    return n_local_max * maxd + n           # sizes only, no id operand
+
+
+def plain_sum(u, v):
+    return u + v                            # no multiplicative packing

@@ -1,0 +1,19 @@
+"""POSITIVE id-overflow fixtures: every marked line must fire."""
+import numpy as np
+
+
+def packed_dedup_key(u, v, n):
+    return u * n + v                        # FIRE: PR 3's exact bug
+
+
+def grid_vertex_id(ii, jj, cols):
+    vid = ii * cols + jj                    # FIRE: unpromoted 2D packing
+    return vid
+
+
+def grid3d_vertex_id(ii, jj, kk, ny, nz):
+    return ii * ny * nz + jj * nz + kk      # FIRE: nested 3D packing
+
+
+def cell_key(cid, grid_n):
+    return cid[:, 0] * grid_n + cid[:, 1]   # FIRE: subscripted id operands

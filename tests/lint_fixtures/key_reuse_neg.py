@@ -1,0 +1,37 @@
+"""NEGATIVE key-reuse fixtures: nothing here may fire."""
+import jax
+
+
+def split_then_use(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (4,))
+    b = jax.random.normal(k2, (4,))
+    return a + b
+
+
+def fold_per_iteration(key, n):
+    out = 0.0
+    for i in range(n):
+        ik = jax.random.fold_in(key, i)     # re-derived inside the loop
+        out += jax.random.uniform(ik, ())
+    return out
+
+
+def rebound_key(key):
+    a = jax.random.uniform(key, (4,))
+    key = jax.random.fold_in(key, 1)        # fresh key, same name
+    b = jax.random.normal(key, (4,))
+    return a + b
+
+
+def exclusive_branches(key, flag):
+    if flag:
+        return jax.random.uniform(key, ())
+    else:
+        return jax.random.normal(key, ())   # other arm of the same branch
+
+
+def not_a_key(view, order):
+    a = view[order]
+    b = view[order]                          # plain arrays are not tracked
+    return a + b

@@ -1,0 +1,22 @@
+"""POSITIVE key-reuse fixtures: every marked line must fire."""
+import jax
+
+
+def linear_reuse(key):
+    a = jax.random.uniform(key, (4,))
+    b = jax.random.normal(key, (4,))        # FIRE: key consumed twice
+    return a + b
+
+
+def loop_reuse(key, n):
+    out = 0.0
+    for _ in range(n):
+        out += jax.random.uniform(key, ())  # FIRE: same key every iteration
+    return out
+
+
+def reuse_after_tracking():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.bits(key, (2,))
+    y = jax.random.permutation(key, 8)      # FIRE: replayed local key
+    return x, y

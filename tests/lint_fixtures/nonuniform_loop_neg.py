@@ -1,0 +1,41 @@
+"""NEGATIVE nonuniform-loop fixtures: nothing here may fire."""
+import jax
+import jax.numpy as jnp
+
+
+def static_schedule_spmd(view, shifts: tuple, widths: tuple):
+    # python loop over a static round schedule: unrolls once, cached forever
+    for k, w in zip(shifts, widths):
+        view = view + k * w
+    return view
+
+
+def while_uniform_spmd(view, comm):
+    def cond(state):
+        c, n = state
+        return n > 0                        # psum-derived: shard-agreed
+
+    def body(state):
+        c, n = state
+        c = c - 1
+        return c, comm.psum(jnp.sum(c))
+
+    return jax.lax.while_loop(cond, body, (view, jnp.int32(1)))
+
+
+def fori_pmax_bound_spmd(view, comm):
+    n_steps = comm.pmax(jnp.sum(view > 0))  # reduced trip count
+
+    def body(i, c):
+        return comm.psum(c)
+
+    return jax.lax.fori_loop(0, n_steps, body, view)
+
+
+def fori_pure_body_spmd(view):
+    n_local = jnp.sum(view > 0)             # divergent bound, but the body
+
+    def body(i, c):                         # never communicates: allowed
+        return c + 1
+
+    return jax.lax.fori_loop(0, n_local, body, view)

@@ -1,0 +1,30 @@
+"""POSITIVE nonuniform-loop fixtures: every marked site must fire."""
+import jax
+import jax.numpy as jnp
+
+
+def python_loop_traced_spmd(view):
+    n = jnp.sum(view > 0)
+    acc = 0
+    for i in range(n):                      # FIRE: traced python loop bound
+        acc = acc + i
+    return acc
+
+
+def while_nonuniform_spmd(view, comm):
+    def cond(c):
+        return jnp.any(c > 0)               # per-shard: shards may disagree
+
+    def body(c):
+        return c - comm.psum(c)
+
+    return jax.lax.while_loop(cond, body, view)  # FIRE: divergent trip count
+
+
+def fori_nonuniform_spmd(view, comm):
+    n_need = jnp.sum(view > 0)              # per-shard count, never reduced
+
+    def body(i, c):
+        return comm.psum(c)
+
+    return jax.lax.fori_loop(0, n_need, body, view)  # FIRE: divergent bound

@@ -1,0 +1,47 @@
+"""The int32-CSR guard (repro.core.graph.check_int32_limits).
+
+Pure shape arithmetic at the exact ``n_local_max * maxd`` boundary — no
+8GB allocations — plus a spy test that ``partition_graph`` actually runs
+the guard before building the ELL arrays.
+"""
+import pytest
+
+from repro.core import partition_graph, rmat
+from repro.core.graph import INT32_LIMIT, check_int32_limits
+
+
+class TestInt32Limits:
+    def test_ell_boundary_exact(self):
+        # largest legal ELL tile: n_local_max * maxd == 2**31 - 1
+        check_int32_limits(10, INT32_LIMIT - 1, 1)
+        with pytest.raises(ValueError, match="int32 ELL overflow"):
+            check_int32_limits(10, INT32_LIMIT, 1)
+        # the product overflows, not either factor
+        check_int32_limits(10, 2**16 - 1, 2**15 - 1)
+        with pytest.raises(ValueError, match="partition over more workers"):
+            check_int32_limits(10, 2**16, 2**15)
+
+    def test_maxd2_participates(self):
+        check_int32_limits(10, 2**16, 2, maxd2=2**14)
+        with pytest.raises(ValueError, match="int32 ELL overflow"):
+            check_int32_limits(10, 2**16, 2, maxd2=2**15)
+
+    def test_global_id_limit(self):
+        check_int32_limits(INT32_LIMIT - 1, 4, 4)
+        with pytest.raises(ValueError, match="int32"):
+            check_int32_limits(INT32_LIMIT, 4, 4)
+
+    def test_partition_graph_runs_the_guard(self, monkeypatch):
+        from repro.core import graph as graph_mod
+        calls = []
+
+        def spy(*a, **k):
+            calls.append((a, k))
+            return check_int32_limits(*a, **k)
+
+        monkeypatch.setattr(graph_mod, "check_int32_limits", spy)
+        g = rmat.grid2d(4, 4, 5)
+        partition_graph(g, 2)
+        assert calls, "partition_graph must invoke the int32 guard"
+        (n_global, n_local_max, maxd), _ = calls[0]
+        assert n_global == g.n and n_local_max * maxd < INT32_LIMIT

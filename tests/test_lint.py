@@ -1,0 +1,192 @@
+"""Tests for the repro-lint static-analysis pass (src/repro/analysis).
+
+Three layers of coverage:
+
+1. Per-rule fixture tests: each rule has a positive fixture (every line
+   marked ``# FIRE`` must produce exactly one finding of that rule, and
+   no others) and a negative fixture (zero findings).  The fixtures
+   double as executable documentation of what each rule means.
+2. Mechanism tests: inline suppressions, the committed-baseline split,
+   and finding rendering.
+3. Self-check: ``src/repro/core`` and ``src/repro/kernels`` must lint
+   completely clean with zero suppressions — the acceptance bar the CI
+   lint job enforces.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    RULES,
+    Finding,
+    count_suppressions,
+    lint_source,
+    load_baseline,
+    run_lint,
+    split_baselined,
+    write_baseline,
+)
+
+FIXTURES = Path(__file__).parent / "lint_fixtures"
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def fire_lines(path: Path) -> set[int]:
+    """Lines carrying a ``# FIRE`` marker — the golden finding list."""
+    return {
+        i
+        for i, line in enumerate(path.read_text().splitlines(), start=1)
+        if "# FIRE" in line
+    }
+
+
+def lint_fixture(name: str, virtual_path: str | None = None) -> list[Finding]:
+    """Lint one fixture file with ALL rules enabled.
+
+    ``virtual_path`` maps the fixture into a pretend repo location so
+    path-scoped rules (host-sync, divergent-collective, nonuniform-loop
+    hot-path scoping) see it as core/ code.
+    """
+    src = (FIXTURES / name).read_text()
+    errors: list[str] = []
+    findings = lint_source(src, virtual_path or name, errors=errors)
+    assert not errors, f"lint errors on {name}: {errors}"
+    return findings
+
+
+# rule -> (positive fixture, negative fixture, virtual path prefix or None)
+RULE_FIXTURES = {
+    "key-reuse": ("key_reuse_pos.py", "key_reuse_neg.py", None),
+    "id-overflow": ("id_overflow_pos.py", "id_overflow_neg.py", None),
+    "host-sync": ("host_sync_pos.py", "host_sync_neg.py", "core"),
+    "divergent-collective": (
+        "divergent_collective_pos.py",
+        "divergent_collective_neg.py",
+        "core",
+    ),
+    "nonuniform-loop": (
+        "nonuniform_loop_pos.py",
+        "nonuniform_loop_neg.py",
+        "core",
+    ),
+}
+
+
+def _virtual(name: str, prefix: str | None) -> str | None:
+    return f"{prefix}/{name}" if prefix else None
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_rule_fires_on_positive_fixture(rule):
+    pos, _, prefix = RULE_FIXTURES[rule]
+    findings = lint_fixture(pos, _virtual(pos, prefix))
+    expected = fire_lines(FIXTURES / pos)
+    assert expected, f"{pos} has no # FIRE markers"
+    got = {(f.rule, f.line) for f in findings}
+    want = {(rule, line) for line in expected}
+    assert got == want, (
+        f"{pos}: expected {rule} findings on lines {sorted(expected)}, "
+        f"got {sorted(got)}"
+    )
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_rule_quiet_on_negative_fixture(rule):
+    _, neg, prefix = RULE_FIXTURES[rule]
+    findings = lint_fixture(neg, _virtual(neg, prefix))
+    assert findings == [], (
+        f"{neg}: expected zero findings, got "
+        f"{[f.render() for f in findings]}"
+    )
+
+
+def test_all_rules_have_fixtures():
+    assert set(RULE_FIXTURES) == set(RULES)
+
+
+def test_inline_suppression_silences_one_rule():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.uniform(key, (4,))\n"
+        "    b = jax.random.normal(key, (4,))  # repro-lint: disable=key-reuse\n"
+        "    return a + b\n"
+    )
+    assert lint_source(src, "demo.py") == []
+    # the same source without the pragma fires
+    assert lint_source(src.replace("  # repro-lint: disable=key-reuse", ""),
+                       "demo.py") != []
+    assert count_suppressions(src) == 1
+
+
+def test_suppression_is_rule_scoped():
+    # a pragma for an unrelated rule does NOT silence the finding
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.uniform(key, (4,))\n"
+        "    b = jax.random.normal(key, (4,))  # repro-lint: disable=id-overflow\n"
+        "    return a + b\n"
+    )
+    findings = lint_source(src, "demo.py")
+    assert [f.rule for f in findings] == ["key-reuse"]
+
+
+def test_baseline_roundtrip_and_split(tmp_path):
+    f1 = Finding(path="a.py", line=3, rule="key-reuse", message="m1")
+    f2 = Finding(path="b.py", line=9, rule="id-overflow", message="m2")
+    bl = tmp_path / "baseline.json"
+    write_baseline([f1], bl)
+    keys = load_baseline(bl)
+    assert f1.key() in keys and f2.key() not in keys
+    new, old = split_baselined([f1, f2], keys)
+    assert new == [f2] and old == [f1]
+    # baseline matching ignores line numbers: the finding may drift
+    drifted = Finding(path="a.py", line=30, rule="key-reuse", message="m1")
+    new2, old2 = split_baselined([drifted], keys)
+    assert new2 == [] and old2 == [drifted]
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == set()
+
+
+def test_finding_render_is_clickable():
+    f = Finding(path="core/x.py", line=7, rule="host-sync", message="boom")
+    assert f.render() == "core/x.py:7: [host-sync] boom"
+
+
+def test_committed_baseline_is_valid_and_empty():
+    bl = REPO_ROOT / "tools" / "repro_lint_baseline.json"
+    assert json.loads(bl.read_text()) == []
+
+
+def test_core_and_kernels_lint_clean_with_zero_suppressions():
+    """The acceptance bar: hot-path code carries no findings and no
+    pragmas — uniformity contracts go through shard_uniform(), not
+    suppressions."""
+    targets = [
+        str(REPO_ROOT / "src" / "repro" / "core"),
+        str(REPO_ROOT / "src" / "repro" / "kernels"),
+    ]
+    result = run_lint(targets, root=str(REPO_ROOT))
+    assert result.n_files > 0
+    assert result.errors == []
+    assert result.findings == [], [f.render() for f in result.findings]
+    assert result.suppressed == 0
+
+    suppression_count = sum(
+        count_suppressions(p.read_text())
+        for t in targets
+        for p in Path(t).rglob("*.py")
+    )
+    assert suppression_count == 0
+
+
+def test_full_src_tree_lints_clean():
+    result = run_lint([str(REPO_ROOT / "src")], root=str(REPO_ROOT))
+    assert result.errors == []
+    assert result.findings == [], [f.render() for f in result.findings]

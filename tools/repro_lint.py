@@ -1,0 +1,100 @@
+"""repro-lint CLI: the SPMD-safety gate (AST rules + jaxpr trace audit).
+
+Usage (from the repo root)::
+
+    python -m tools.repro_lint src              # AST rules, baseline applied
+    python -m tools.repro_lint src --trace-audit    # + jaxpr audit at P=2
+    python -m tools.repro_lint src --write-baseline # refresh the baseline
+    python -m tools.repro_lint src --json lint.json # machine-readable dump
+
+Exit code 0 = no non-baselined findings (and, with ``--trace-audit``, every
+jaxpr contract holds).  The committed baseline lives at
+``tools/repro_lint_baseline.json``; rule catalog and suppression policy are
+documented in DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import engine, findings as findings_mod  # noqa: E402
+
+DEFAULT_BASELINE = REPO_ROOT / "tools" / "repro_lint_baseline.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("targets", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="baseline JSON (known legacy findings)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, including baselined ones")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings as the new baseline")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rules to run")
+    ap.add_argument("--trace-audit", action="store_true",
+                    help="also run the jaxpr collective audit at P=2")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write findings + counts to this JSON file")
+    args = ap.parse_args(argv)
+
+    rules = args.rules.split(",") if args.rules else None
+    targets = args.targets or ["src"]
+    baseline = None if (args.no_baseline or args.write_baseline) \
+        else args.baseline
+    res = engine.run_lint(targets, root=REPO_ROOT, baseline=baseline,
+                          rules=rules)
+
+    if args.write_baseline:
+        findings_mod.write_baseline(res.findings, args.baseline)
+        print(f"wrote {len(set(res.findings))} baseline records "
+              f"to {args.baseline}")
+        return 0
+
+    for f in res.findings:
+        print(f.render())
+    for e in res.errors:
+        print(f"ERROR {e}", file=sys.stderr)
+
+    audit_failures: list[str] = []
+    if args.trace_audit:
+        from repro.analysis.trace_audit import run_trace_audit
+        audit = run_trace_audit()
+        for line in audit.summary_lines():
+            print(line)
+        audit_failures = audit.failures
+
+    counts = res.counts()
+    summary = (" ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+               or "clean")
+    print(f"repro-lint: {res.n_files} files, {len(res.findings)} new "
+          f"finding(s) [{summary}], {len(res.baselined)} baselined, "
+          f"{res.suppressed} suppression(s)")
+
+    if args.json_out:
+        payload = dict(
+            n_files=res.n_files,
+            counts=counts,
+            findings=[dict(path=f.path, line=f.line, rule=f.rule,
+                           message=f.message) for f in res.findings],
+            baselined=len(res.baselined),
+            suppressed=res.suppressed,
+            errors=res.errors,
+            trace_audit_failures=audit_failures,
+        )
+        Path(args.json_out).write_text(json.dumps(payload, indent=2) + "\n")
+
+    return 1 if (res.findings or res.errors or audit_failures) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
