@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Weak scaling: fixed vertices-per-shard, growing shard count.
+
+The two lines above MUST stay first: the 2D-mesh dryrun cells need 512
+placeholder host devices and JAX locks the device count on first init.
+
+Three layers, one JSON (BENCH_weak.json):
+
+1. *Measured* sweep — ``pipeline_sim`` on RMAT graphs with n/P held at
+   2**14 (scale 16 @ P=4 ... scale 20 @ P=64), recording wall time and
+   the comm accumulator's wire bytes against the static plan's modeled
+   sparse and all-gather bytes per exchange (DESIGN.md §2).  Weak scaling
+   holds per-shard work constant, so the byte curves isolate how each
+   exchange scheme's volume grows with P.
+2. *Lowered* cells — the batched pipeline compiled (not run) on real 2D
+   ``batch × shard`` meshes at P=256 (``(2, 256)``) and P=512
+   (``(1, 512)``), proving the weak-scaling serving layout lowers with
+   the expected collective structure (DESIGN.md §10).  These cells keep
+   n/P at 2**11: lowering exercises program structure, not data scale,
+   and a scale-22 host-side partition would dominate CI time.
+3. *Projected* cells — ``roofline.coloring_memory_projection`` for the
+   int64-id regime (RMAT scale 31-36, P up to 32768): per-shard bytes,
+   the id/ELL dtypes ``graph.id_policy`` picks, and whether a shard fits
+   HBM.  No allocation; this is the giant-graph envelope the id-width
+   policy exists for.
+
+``--dryrun-only`` (CI's weak-dryrun job) runs layer 2's P=256 cell and
+layer 3 only.
+"""
+import argparse
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import roofline
+from repro.core import (ColorConfig, PipelineConfig, RecolorConfig,
+                        compute_order, ordering, partition_graph,
+                        pipeline_sim, rmat)
+from repro.core.comm import (allgather_bytes_per_exchange, batch_axis_of,
+                             mesh_axes, run_sharded_many, shard_axis_of)
+from repro.core.pipeline import color_then_recolor
+from repro.launch.mesh import make_coloring_mesh
+from repro.roofline import analyze_hlo
+
+from .common import emit
+
+MC = 256
+N_ITERS = 2
+# (rmat scale, P): n/P fixed at 2**14 (full) / 2**12 (fast)
+SWEEP_FULL = ((16, 4), (17, 8), (18, 16), (19, 32), (20, 64))
+SWEEP_FAST = ((14, 4), (15, 8), (16, 16))
+# lowered 2D-mesh cells: (scale, P, batch) with n/P = 2**11
+DRYRUN_FULL = ((19, 256, 2), (20, 512, 1))
+DRYRUN_FAST = ((19, 256, 2),)
+# projected int64-regime cells: (scale, P) — the first three keep
+# n/P = 2**21 (per-shard bytes constant under weak scaling); the
+# scale-36 @ P=2048 cell over-fills HBM on purpose (fits_hbm=False)
+PROJECTIONS = ((31, 1024), (33, 4096), (36, 32768), (36, 2048))
+
+
+def _cfg(scheme: str) -> PipelineConfig:
+    return PipelineConfig(
+        color=ColorConfig(max_colors=MC, superstep=512, scheme=scheme),
+        recolor=RecolorConfig(max_colors=MC, scheme=scheme),
+        n_iters=N_ITERS, patience=0)
+
+
+def _measured_row(scale: int, P: int) -> dict:
+    g = rmat.rmat_good(scale, 8, seed=1)
+    pg = partition_graph(g, P)
+    plan = pg.comm_plan
+    order = compute_order(pg, ordering.INTERNAL_FIRST)
+    row: dict = dict(
+        scale=scale, P=P, n=g.n, m=g.m,
+        n_per_shard=g.n // P,
+        n_local_max=int(pg.n_local_max),
+        max_boundary=int(pg.max_boundary),
+        n_rounds=len(plan.shifts),
+        modeled_sparse_bytes_per_ex=plan.bytes_per_exchange(),
+        modeled_allgather_bytes_per_ex=allgather_bytes_per_exchange(
+            P, int(pg.max_boundary)),
+    )
+    for scheme in ("sparse", "allgather"):
+        t0 = time.time()
+        view, res = pipeline_sim(pg, order, _cfg(scheme))
+        jax.block_until_ready(view)
+        # measured bytes: initial coloring + every recoloring iteration
+        wire = res["color"]["wire_bytes"] + sum(
+            h["wire_bytes"] for h in res["history"])
+        row[f"{scheme}_wall_s"] = round(time.time() - t0, 3)
+        row[f"{scheme}_wire_bytes"] = int(wire)
+        row[f"{scheme}_colors"] = res["history"][-1]["n_colors"]
+    row["bytes_reduction"] = 1.0 - (row["sparse_wire_bytes"]
+                                    / max(row["allgather_wire_bytes"], 1))
+    return row
+
+
+def _dryrun_row(scale: int, P: int, batch: int) -> dict:
+    """Lower + compile the batched pipeline on a 2D mesh; no execution."""
+    g = rmat.rmat_er(scale, 8, seed=1)
+    pg = partition_graph(g, P)
+    mesh = make_coloring_mesh(P, batch=batch)
+    axis = shard_axis_of(mesh)
+    B = max(2, batch)                          # lanes (a multiple of batch)
+    arrs = {k: jnp.repeat(jnp.asarray(v)[:, None], B, axis=1)
+            for k, v in pg.arrays().items()}
+    order = jnp.zeros((P, B, pg.n_local_max), jnp.int32)
+    keys = jax.random.split(jax.random.key(0), B)
+    cfg = _cfg("allgather")
+    fn = jax.vmap(partial(color_then_recolor, cfg=cfg, P_size=P, axis=axis,
+                          lane_axes=(batch_axis_of(mesh),)))
+    t0 = time.time()
+    compiled = jax.jit(
+        lambda a, o, k1, k2: run_sharded_many(fn, mesh, (a, o), (k1, k2),
+                                              axis=axis)).lower(
+            arrs, order, keys, keys).compile()
+    analysis = analyze_hlo(compiled.as_text())
+    return dict(
+        scale=scale, P=P, n=g.n, n_per_shard=g.n // P,
+        mesh=[[n, s] for n, s in mesh_axes(mesh)], batch_lanes=B,
+        compile_s=round(time.time() - t0, 2),
+        coll_count=analysis["coll_count"],
+        coll_bytes=analysis["coll_bytes"],
+    )
+
+
+def _projection_row(scale: int, P: int) -> dict:
+    proj = roofline.coloring_memory_projection(2**scale, P, maxd=64)
+    return dict(scale=scale, **proj)
+
+
+def run(fast: bool = True, out_path: str | Path = "BENCH_weak.json",
+        dryrun_only: bool = False):
+    rec: dict = dict(max_colors=MC, n_iters=N_ITERS,
+                     sweep=[], dryrun2d=[], projections=[])
+
+    if not dryrun_only:
+        for scale, P in (SWEEP_FAST if fast else SWEEP_FULL):
+            row = _measured_row(scale, P)
+            rec["sweep"].append(row)
+            emit(f"weak/s{scale}_P{P}/sparse", row["sparse_wall_s"] * 1e6,
+                 f"wire={row['sparse_wire_bytes']};"
+                 f"model={row['modeled_sparse_bytes_per_ex']};"
+                 f"red={row['bytes_reduction']:.2f}")
+
+    for scale, P, batch in (DRYRUN_FAST if fast else DRYRUN_FULL):
+        row = _dryrun_row(scale, P, batch)
+        rec["dryrun2d"].append(row)
+        emit(f"weak/dryrun_s{scale}_P{P}", row["compile_s"] * 1e6,
+             f"mesh={row['mesh']};colls={row['coll_count']}")
+
+    for scale, P in PROJECTIONS:
+        row = _projection_row(scale, P)
+        rec["projections"].append(row)
+        emit(f"weak/proj_s{scale}_P{P}", 0.0,
+             f"id={row['id_dtype']};per_shard={row['total_per_shard']};"
+             f"fits_hbm={row['fits_hbm']}")
+
+    Path(out_path).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--dryrun-only", action="store_true")
+    ap.add_argument("--out", default="BENCH_weak.json")
+    args = ap.parse_args()
+    run(fast=args.fast, out_path=args.out, dryrun_only=args.dryrun_only)

@@ -76,6 +76,27 @@ def bench_table(root: str | Path = ".") -> str:
             f"{r['program_cache']['hit_rate']:.2f}, warm p50/p99 "
             f"{r['warm_p50_ms']:.0f}/{r['warm_p99_ms']:.0f} ms"))
 
+    r = rec("weak")
+    if r:
+        top = max(r["sweep"], key=lambda s: s["P"]) if r["sweep"] else None
+        dr = max(r["dryrun2d"], key=lambda s: s["P"]) if r["dryrun2d"] else None
+        pr = max(r["projections"], key=lambda s: s["scale"])
+        parts = []
+        if top:
+            parts.append(
+                f"scale-{top['scale']} @ P={top['P']} measured, sparse ships "
+                f"**{top['bytes_reduction'] * 100:.0f}%** fewer bytes")
+        if dr:
+            axes = "×".join(f"{n}={s}" for n, s in dr["mesh"])
+            parts.append(f"2D mesh ({axes}) lowers in {dr['compile_s']:.0f}s")
+        parts.append(
+            f"scale-{pr['scale']} int64 projection "
+            f"{'fits' if pr['fits_hbm'] else 'exceeds'} HBM "
+            f"({pr['total_per_shard'] / 1e9:.1f} GB/shard @ P={pr['P']})")
+        setting = (f"n/P=2^14, P≤{top['P']}" if top
+                   else f"dryrun P={dr['P']}" if dr else "projections")
+        rows.append(("weak", setting, "; ".join(parts)))
+
     out = ["| bench | setting | headline |", "|---|---|---|"]
     out += [f"| {a} | {b} | {c} |" for a, b, c in rows]
     return "\n".join(out)

@@ -14,7 +14,9 @@ The rule fires on additive combinations of a multiplicative id term —
   ``dst``, ``row``, ``vid``, ``cid``, ``ii`` ...) with a size-like name
   (``n``, ``cols``, ``grid_n``, ``n_global`` ...), and
 - no node of the expression promotes to a 64-bit dtype
-  (``.astype(np.int64)``, ``np.int64(...)``, ``dtype=np.int64`` ...).
+  (``.astype(np.int64)``, ``np.int64(...)``, ``dtype=np.int64`` ...) or
+  routes through the id policy (``.astype(pol.id_dtype)`` — the policy
+  widens exactly when the packing would wrap, see ``graph.id_policy``).
 
 Pure size-by-size arithmetic (``n_local_max * maxd``) and already-promoted
 packings stay quiet.
@@ -33,7 +35,7 @@ ID_NAMES = {"u", "v", "src", "dst", "row", "rows", "col", "vid", "vids",
 SIZE_NAMES = {"n", "cols", "ncols", "grid_n", "ny", "nz", "nx", "n_global",
               "n_total", "num_nodes", "n_nodes", "width", "stride",
               "n_cols", "dim", "side", "m"}
-PROMOTED = re.compile(r"int64|uint64|i8\b|int_\b")
+PROMOTED = re.compile(r"int64|uint64|i8\b|int_\b|id_dtype|ell_dtype")
 
 
 def _names(node: ast.AST) -> set[str]:

@@ -16,6 +16,10 @@ Public API:
                                                    counters (hits/misses/traces)
   resolve_scheme                                 — trace-time sparse-vs-
                                                    allgather decision ("auto")
+  IdPolicy, id_policy, check_int32_limits        — id-width policy: int32
+                                                   under 2**31, int64 past it
+  shard_axis_of, batch_axis_size, mesh_axes      — mesh axis-name contract
+                                                   (DESIGN.md §10)
   message_stats                                  — piggybacking accounting
   presets.speed / presets.quality                — the paper's parameter sets
   select_colors                                  — shared bitset color-selection
@@ -24,12 +28,13 @@ Public API:
 from repro.kernels.ops import select_colors, select_colors_d2
 
 from . import ordering, presets, rmat, selection
-from .comm import (AUTO, AXIS, SCHEME_CHOICES, SCHEMES, AxisComm, CommConfig,
-                   allgather_bytes_per_exchange, resolve_scheme,
+from .comm import (AUTO, AXIS, BATCH_AXIS, SCHEME_CHOICES, SCHEMES, AxisComm,
+                   CommConfig, allgather_bytes_per_exchange, batch_axis_of,
+                   batch_axis_size, mesh_axes, resolve_scheme, shard_axis_of,
                    stats_to_host)
-from .graph import (CommPlan, Graph, GraphBucket, PartitionedGraph,
-                    bucket_graphs, build_comm_plan, pad_partition,
-                    partition_graph)
+from .graph import (CommPlan, Graph, GraphBucket, IdPolicy, PartitionedGraph,
+                    bucket_graphs, build_comm_plan, check_int32_limits,
+                    id_policy, pad_partition, partition_graph)
 from .ordering import compute_order
 from .piggyback import MessageStats, message_stats
 from .pipeline import (PipelineConfig, PlanSignature, bucket_signature,
@@ -46,19 +51,22 @@ from .speculative import (ColorConfig, color_graph_sharded, color_graph_sim,
 from .validate import assert_valid, check_coloring, colors_from_views
 
 __all__ = [
-    "AUTO", "AXIS", "AxisComm", "ColorConfig", "CommConfig", "CommPlan",
-    "Graph", "GraphBucket", "MessageStats", "ND", "NI", "PartitionedGraph",
+    "AUTO", "AXIS", "AxisComm", "BATCH_AXIS", "ColorConfig", "CommConfig",
+    "CommPlan", "Graph", "GraphBucket", "IdPolicy", "MessageStats", "ND",
+    "NI", "PartitionedGraph",
     "PipelineConfig", "PlanSignature", "RAND", "RV", "RecolorConfig",
     "SCHEME_CHOICES", "SCHEMES", "allgather_bytes_per_exchange", "arc_sim",
-    "assert_valid", "bucket_graphs", "build_comm_plan", "check_coloring",
+    "assert_valid", "batch_axis_of", "batch_axis_size", "bucket_graphs",
+    "build_comm_plan", "check_coloring", "check_int32_limits",
     "bucket_signature", "color_graph_sharded", "color_graph_sim",
     "color_many", "color_many_sharded", "color_spmd", "color_then_recolor",
-    "colors_from_views", "compute_order", "message_stats", "ordering",
+    "colors_from_views", "compute_order", "id_policy", "mesh_axes",
+    "message_stats", "ordering",
     "pad_partition", "partition_graph", "pipeline_sharded", "pipeline_sim",
     "plan_signature", "presets", "program_cache_clear",
     "program_cache_contains", "program_cache_stats", "recolor_iterations",
     "recolor_loop_sim",
     "recolor_sharded", "recolor_sim", "resolve_pipeline_cfg",
     "resolve_scheme", "rmat", "schedule_for_iteration", "select_colors",
-    "select_colors_d2", "selection", "stats_to_host",
+    "select_colors_d2", "selection", "shard_axis_of", "stats_to_host",
 ]

@@ -38,7 +38,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
-AXIS = "workers"
+AXIS = "workers"        # default shard (graph-partition) mesh axis
+BATCH_AXIS = "batch"    # graph-batch mesh axis of 2D batch×shard meshes
 
 ALLGATHER = "allgather"
 SPARSE = "sparse"
@@ -79,9 +80,23 @@ class CommConfig:
 
 @dataclasses.dataclass(frozen=True)
 class AxisComm:
-    """Named-axis collectives used by the coloring SPMD kernels."""
+    """Named-axis collectives used by the coloring SPMD kernels.
+
+    ``axis`` is the shard (graph-partition) axis every data collective runs
+    over.  ``lane_axes`` names *additional* mesh axes the program's control
+    flow must be uniform over — on a 2D ``batch × shard`` mesh, graph lanes
+    on different batch rows take data-dependent trip counts and exchange
+    decisions, but one SPMD program spans the whole mesh, so every device
+    must execute the same collective sequence.  ``lane_uniform`` widens an
+    already shard-uniform control value (a loop bound, an exchange
+    predicate) across the lane axes; each lane then *applies* the effect
+    under its own local predicate, keeping results bitwise the solo run's
+    (DESIGN.md §10).  With no lane axes (sim, 1-axis meshes) it compiles
+    to nothing, so those programs are unchanged.
+    """
 
     axis: str = AXIS
+    lane_axes: tuple = ()
 
     def psum(self, x):
         return jax.lax.psum(x, self.axis)
@@ -102,6 +117,62 @@ class AxisComm:
 
     def index(self):
         return jax.lax.axis_index(self.axis)
+
+    def lane_uniform(self, x):
+        """Max-reduce a shard-uniform control value over the lane axes.
+
+        Identity when the mesh has none (``lane_axes == ()``); otherwise
+        the mesh-wide bound/predicate every device agrees to execute
+        under (bools reduce as "any lane needs it").  Only *execution* is
+        widened — callers mask per-lane application with the lane's own
+        local value so lane results stay bitwise.
+        """
+        return jax.lax.pmax(x, self.lane_axes) if self.lane_axes else x
+
+
+def shard_axis_of(mesh) -> str:
+    """The mesh axis the coloring core shards graph partitions over.
+
+    The axis-name contract (DESIGN.md §10): a ``workers`` axis always wins;
+    otherwise the single non-``batch`` axis; otherwise (degenerate smoke
+    meshes where every axis has size 1, e.g. ``make_local_mesh``) the last
+    axis.  Ambiguous multi-axis meshes raise — the caller must build its
+    mesh through ``launch.mesh.MeshSpec`` so the names are explicit.
+    """
+    names = tuple(mesh.axis_names)
+    if AXIS in names:
+        return AXIS
+    cands = [n for n in names if n != BATCH_AXIS]
+    if len(cands) == 1:
+        return cands[0]
+    sized = [n for n in cands if int(mesh.shape[n]) > 1]
+    if len(sized) == 1:
+        return sized[0]
+    if cands and not sized:          # all-size-1 smoke mesh: any axis works
+        return cands[-1]
+    raise ValueError(
+        f"cannot infer the shard axis of mesh axes {names}: none is named "
+        f"{AXIS!r} and {len(sized)} non-{BATCH_AXIS!r} axes have size > 1; "
+        f"build the mesh via launch.mesh.MeshSpec")
+
+
+def batch_axis_of(mesh) -> str | None:
+    """The graph-batch axis of a 2D ``batch × shard`` mesh (None if 1D)."""
+    return BATCH_AXIS if BATCH_AXIS in tuple(mesh.axis_names) else None
+
+
+def batch_axis_size(mesh) -> int:
+    """Size of the graph-batch mesh axis (1 when the mesh has none)."""
+    b = batch_axis_of(mesh)
+    return int(mesh.shape[b]) if b is not None else 1
+
+
+def mesh_axes(mesh) -> tuple:
+    """Hashable ``((axis name, axis size), ...)`` — the program-cache key
+    component that pins which mesh geometry a sharded program was traced
+    for (``pipeline.PlanSignature.axes``)."""
+    return tuple((n, int(s)) for n, s in zip(mesh.axis_names,
+                                             mesh.devices.shape))
 
 
 def shard_uniform(x):
@@ -164,20 +235,27 @@ def stats_to_host(stats) -> dict:
     return {k: int(v) for k, v in host.items()}
 
 
-def run_sim(fn, P_size: int, sharded_args: tuple, broadcast_args: tuple = ()):
+def run_sim(fn, P_size: int, sharded_args: tuple, broadcast_args: tuple = (),
+            axis: str = AXIS):
     """Execute SPMD `fn` on ONE device by vmapping over the leading P axis.
 
     ``sharded_args`` carry a leading axis of size ``P_size``; ``broadcast_args``
     are replicated. `fn(*sharded, *broadcast)` must only communicate via
-    ``AxisComm``.
+    ``AxisComm`` (over ``axis``).
     """
     in_axes = tuple(0 for _ in sharded_args) + tuple(None for _ in broadcast_args)
-    return jax.vmap(fn, in_axes=in_axes, axis_name=AXIS,
+    return jax.vmap(fn, in_axes=in_axes, axis_name=axis,
                     axis_size=P_size)(*sharded_args, *broadcast_args)
 
 
-def run_sharded(fn, mesh, sharded_args: tuple, broadcast_args: tuple = ()):
-    """Execute SPMD `fn` over a real mesh axis ``workers`` via shard_map."""
+def run_sharded(fn, mesh, sharded_args: tuple, broadcast_args: tuple = (),
+                axis: str | None = None):
+    """Execute SPMD `fn` over a real mesh shard axis via shard_map.
+
+    ``axis`` defaults to ``shard_axis_of(mesh)`` — the coloring core never
+    assumes the axis is literally named ``workers``.
+    """
+    axis = shard_axis_of(mesh) if axis is None else axis
 
     def wrapped(*args):
         ns = len(sharded_args)
@@ -185,11 +263,50 @@ def run_sharded(fn, mesh, sharded_args: tuple, broadcast_args: tuple = ()):
         out = fn(*sh, *args[ns:])
         return jax.tree.map(lambda x: x[None], out)
 
-    in_specs = tuple(P(AXIS) for _ in sharded_args) + tuple(
+    in_specs = tuple(P(axis) for _ in sharded_args) + tuple(
         P() for _ in broadcast_args)
     return compat.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
-                            out_specs=P(AXIS), check=False)(
+                            out_specs=P(axis), check=False)(
                                 *sharded_args, *broadcast_args)
+
+
+def run_sharded_many(fn, mesh, sharded_args: tuple, lane_args: tuple = (),
+                     axis: str | None = None):
+    """Execute a lane-vmapped SPMD ``fn`` on a 2D ``batch × shard`` mesh.
+
+    ``fn`` is the per-shard program already vmapped over a leading graph-lane
+    axis (``jax.vmap(color_then_recolor)``-style).  ``sharded_args`` carry
+    ``(P, B, ...)``: dim 0 shards over the shard axis, dim 1 over the batch
+    axis (so each device holds ``B / batch_size`` lanes of one shard) —
+    the vmap graph axis and the shard_map graph axis are distinct mesh
+    dimensions instead of vmap-inside-shard_map.  ``lane_args`` carry
+    ``(B, ...)`` per-lane values (RNG keys): sharded over the batch axis
+    only, replicated across shards.
+
+    On a mesh without a ``batch`` axis this defers to ``run_sharded`` with
+    the lanes as broadcast args — bitwise (and program-structure-wise) the
+    1-axis ``color_many_sharded`` path, which is also what a 2D mesh with
+    ``batch=1`` lowers to per shard.  ``B`` must divide by the batch-axis
+    size (the pipeline driver pads lanes to a multiple).
+    """
+    axis = shard_axis_of(mesh) if axis is None else axis
+    baxis = batch_axis_of(mesh)
+    if baxis is None:
+        return run_sharded(fn, mesh, sharded_args, lane_args, axis=axis)
+    # 2D mesh (a batch=1 axis included — every device then holds all B
+    # lanes, which is exactly the 1-axis per-shard program):
+
+    def wrapped(*args):
+        ns = len(sharded_args)
+        sh = [jax.tree.map(lambda x: x[0], a) for a in args[:ns]]
+        out = fn(*sh, *args[ns:])
+        return jax.tree.map(lambda x: x[None], out)
+
+    in_specs = tuple(P(axis, baxis) for _ in sharded_args) + tuple(
+        P(baxis) for _ in lane_args)
+    return compat.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(axis, baxis), check=False)(
+                                *sharded_args, *lane_args)
 
 
 def exchange_boundary(view: jnp.ndarray, boundary: jnp.ndarray,
@@ -217,7 +334,7 @@ def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
                     shifts: tuple, widths: tuple, P_size: int,
                     n_local_max: int, comm: AxisComm, wire_dtype=None,
                     itemsize: int = 4, round_mask=None,
-                    byte_widths=None) -> jnp.ndarray:
+                    byte_widths=None, apply_mask=None) -> jnp.ndarray:
     """One sparse neighbour-to-neighbour exchange (``ppermute`` rounds).
 
     Round ``r`` ships, for every shard p at once, the ``widths[r]`` boundary
@@ -232,6 +349,15 @@ def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
     ``round_mask`` (optional, (n_rounds,) bool, shard-uniform) lets callers
     skip rounds no destination currently needs (the sparse form of the
     paper's piggybacking, see recolor.py); skipped rounds cost no wire bytes.
+
+    ``apply_mask`` (optional, (n_rounds,) bool) masks which executed rounds
+    this caller actually *applies* (ghost refresh + byte accounting).  On a
+    2D ``batch × shard`` mesh the executed schedule is the lane-uniform
+    union over batch lanes — every device must run the same ``ppermute``
+    sequence — while each lane keeps its own piggyback schedule here, so a
+    lane never refreshes a ghost (or accounts a byte) ahead of its solo
+    schedule.  ``None`` applies every executed round (the 1-axis/sim path,
+    where ``round_mask`` already *is* the lane's own schedule).
 
     ``byte_widths`` (optional, (n_rounds,) int32, traced) overrides the
     *accounted* payload width per round without changing the shipped buffer
@@ -263,7 +389,11 @@ def exchange_sparse(view: jnp.ndarray, send_slot: jnp.ndarray,
             vals = buf[jnp.minimum(ghost_pos, w - 1)].astype(ghosts.dtype)
             b = (jnp.int32(w * itemsize) if byte_widths is None
                  else byte_widths[r].astype(jnp.int32) * itemsize)
-            return jnp.where(mine, vals, ghosts), total + b
+            keep = mine
+            if apply_mask is not None:
+                keep = mine & apply_mask[r]
+                b = jnp.where(apply_mask[r], b, jnp.int32(0))
+            return jnp.where(keep, vals, ghosts), total + b
 
         if round_mask is None:
             ghosts, total = do_round((ghosts, total))
@@ -291,12 +421,13 @@ def make_exchange(arrs, n_local_max: int, P_size: int, comm: AxisComm,
         # per-graph byte-accounting override on the shared round schedule
         byte_widths = arrs.get("round_widths")
 
-        def exchange(view, round_mask=None):
+        def exchange(view, round_mask=None, apply_mask=None):
             return exchange_sparse(
                 view, arrs["send_slot"], arrs["ghost_shift"],
                 arrs["ghost_pos"], shifts, widths, P_size, n_local_max,
                 comm, wire_dtype=cfg.wire_dtype, itemsize=cfg.itemsize,
-                round_mask=round_mask, byte_widths=byte_widths)
+                round_mask=round_mask, byte_widths=byte_widths,
+                apply_mask=apply_mask)
 
         return exchange
 
@@ -308,7 +439,7 @@ def make_exchange(arrs, n_local_max: int, P_size: int, comm: AxisComm,
         bytes_per_ex = jnp.int32(
             allgather_bytes_per_exchange(P_size, max_b, cfg.itemsize))
 
-    def exchange(view, round_mask=None):
+    def exchange(view, round_mask=None, apply_mask=None):
         view = exchange_boundary(
             view, arrs["boundary"], arrs["ghost_owner"], arrs["ghost_slot"],
             n_local_max, comm, wire_dtype=cfg.wire_dtype)

@@ -51,7 +51,7 @@ class Graph:
 
     n: int
     indptr: np.ndarray  # (n+1,) int64
-    indices: np.ndarray  # (2m,) int32
+    indices: np.ndarray  # (2m,) int32 (int64 past the 2**31 id bound)
 
     @property
     def m_directed(self) -> int:
@@ -83,29 +83,87 @@ class Graph:
         return int((c > 0).sum())
 
 
-#: every device index array (slots, vids, ELL neighbours) is int32.
+#: per-shard slot index arrays (slots, ELL neighbours) are int32 below this.
 INT32_LIMIT = 2**31
+#: hard ceiling of the id layout — int64 ids cannot represent past this.
+INT64_LIMIT = 2**63
+
+
+@dataclasses.dataclass(frozen=True)
+class IdPolicy:
+    """The single id-width decision point (DESIGN.md §10).
+
+    Two independent hazards, each with its own dtype verdict:
+
+    - **global ids** (``gvid``, ``prio``, CSR ``indices``, the RMAT edge
+      packing): int32 while ``n_global < 2**31``, int64 past it;
+    - **the flattened ELL index** ``v * maxd + k`` the selection kernels
+      compute per shard: int32 while ``n_local_max * max(maxd, maxd2)``
+      stays under 2**31.  *Per-shard* slot ids (``nbr``, ``indices`` slot
+      entries, ``boundary``) are bounded by ``n_slots`` and stay int32
+      regardless — only the flat-index arithmetic widens.
+
+    ``promoted`` is true when either verdict is int64 — the giant-graph
+    regime the int32 guard used to reject outright.  ``id_policy`` is the
+    only place that compares against ``INT32_LIMIT``; everything else
+    (``partition_graph``, ``rmat``, roofline projections) consumes the
+    policy's dtypes.
+    """
+
+    n_global: int
+    ell: int                 # n_local_max * max(maxd, maxd2, 1)
+    id_dtype: object         # numpy dtype for global vertex ids
+    ell_dtype: object        # numpy dtype for flattened ELL indices
+
+    @property
+    def promoted(self) -> bool:
+        return (np.dtype(self.id_dtype) == np.int64
+                or np.dtype(self.ell_dtype) == np.int64)
+
+    @property
+    def id_itemsize(self) -> int:
+        return np.dtype(self.id_dtype).itemsize
+
+
+def id_policy(n_global: int, n_local_max: int, maxd: int, maxd2: int = 0,
+              *, allow_int64: bool = True) -> IdPolicy:
+    """Decide the id widths for a (partitioned) graph's device layout.
+
+    Pure shape arithmetic — callable (and testable) without allocating the
+    arrays it governs.  Under ``allow_int64=True`` (the default) crossing
+    either int32 bound *promotes* the affected dtype to int64 instead of
+    raising; ``allow_int64=False`` reproduces the historical hard guard
+    (``check_int32_limits``).  int64 itself overflowing is always an error.
+    """
+    ell = n_local_max * max(maxd, maxd2, 1)
+    if n_global >= INT64_LIMIT or ell >= INT64_LIMIT:
+        raise ValueError(
+            f"graph exceeds the int64 id range: n_global={n_global}, "
+            f"n_local_max * maxd = {ell} (>= {INT64_LIMIT})")
+    if not allow_int64:
+        if n_global >= INT32_LIMIT:
+            raise ValueError(
+                f"graph has {n_global} vertices but device vertex ids are "
+                f"int32 (< {INT32_LIMIT}); this exceeds the supported size")
+        if ell >= INT32_LIMIT:
+            raise ValueError(
+                f"int32 ELL overflow: n_local_max * maxd = {n_local_max} * "
+                f"{max(maxd, maxd2, 1)} = {ell} >= {INT32_LIMIT}; partition "
+                f"over more workers (larger P) to shrink the per-shard tile")
+    return IdPolicy(
+        n_global=n_global, ell=ell,
+        id_dtype=np.int64 if n_global >= INT32_LIMIT else np.int32,
+        ell_dtype=np.int64 if ell >= INT32_LIMIT else np.int32)
 
 
 def check_int32_limits(n_global: int, n_local_max: int, maxd: int,
                        maxd2: int = 0) -> None:
-    """Raise before any int32 device index can overflow (DESIGN.md §9).
+    """Historical hard int32 guard — now a thin ``id_policy`` wrapper.
 
-    Pure shape arithmetic — callable (and testable) without allocating the
-    arrays it protects.  Two hazards: global vertex ids (``gvid``,
-    ``indices`` are int32) and the flattened ELL index ``v * maxd + k``
-    the selection kernels compute per shard.
+    Raises exactly where the pre-policy guard raised; callers that can
+    handle the int64 regime should consume ``id_policy`` directly.
     """
-    if n_global >= INT32_LIMIT:
-        raise ValueError(
-            f"graph has {n_global} vertices but device vertex ids are "
-            f"int32 (< {INT32_LIMIT}); this exceeds the supported size")
-    ell = n_local_max * max(maxd, maxd2, 1)
-    if ell >= INT32_LIMIT:
-        raise ValueError(
-            f"int32 ELL overflow: n_local_max * maxd = {n_local_max} * "
-            f"{max(maxd, maxd2, 1)} = {ell} >= {INT32_LIMIT}; partition "
-            f"over more workers (larger P) to shrink the per-shard tile")
+    id_policy(n_global, n_local_max, maxd, maxd2, allow_int64=False)
 
 
 def _pad2(rows: list[np.ndarray], width: int, fill: int) -> np.ndarray:
@@ -257,7 +315,9 @@ class CommPlan:
 class PartitionedGraph:
     """Per-processor padded arrays, stacked on a leading P axis (host, numpy).
 
-    All index arrays are int32. `n_slots = n_local_max + max_ghost + 1`.
+    Per-shard slot index arrays are int32; the global-id arrays
+    (``gvid``/``prio``) follow ``id_policy`` — int32 below the 2**31
+    vertex bound, int64 past it.  `n_slots = n_local_max + max_ghost + 1`.
     """
 
     P: int
@@ -360,10 +420,13 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     """
     assert halo in (1, 2), f"halo must be 1 or 2, got {halo}"
     rng = np.random.default_rng(seed)
+    # global-id width from n alone; the ELL verdict is re-derived below once
+    # maxd is known (id_policy is the single id-width decision point)
+    id_dt = id_policy(g.n, 1, 1).id_dtype
     if permute:
-        perm = rng.permutation(g.n).astype(np.int32)
+        perm = rng.permutation(g.n).astype(id_dt)
         inv = np.empty_like(perm)
-        inv[perm] = np.arange(g.n, dtype=np.int32)
+        inv[perm] = np.arange(g.n, dtype=id_dt)
         deg = g.degrees
         new_indptr = np.zeros(g.n + 1, dtype=np.int64)
         new_indptr[1:] = np.cumsum(deg[perm])
@@ -376,7 +439,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
 
     offs = np.linspace(0, g.n, P + 1).astype(np.int64)
     owner_of = np.searchsorted(offs, np.arange(g.n), side="right") - 1
-    prio_global = rng.permutation(g.n).astype(np.int32)  # random total order (§2.2)
+    prio_global = rng.permutation(g.n).astype(id_dt)  # random total order (§2.2)
 
     n_local = (offs[1:] - offs[:-1]).astype(np.int32)
     n_local_max = int(n_local.max())
@@ -459,8 +522,8 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     sentinel = n_slots - 1
 
     indptr = np.zeros((P, n_local_max + 1), dtype=np.int32)
-    gvid = np.full((P, n_slots), -1, dtype=np.int32)
-    prio = np.full((P, n_slots), -1, dtype=np.int32)
+    gvid = np.full((P, n_slots), -1, dtype=id_dt)
+    prio = np.full((P, n_slots), -1, dtype=id_dt)
     is_internal = np.zeros((P, n_local_max), dtype=bool)
     degree = np.zeros((P, n_local_max), dtype=np.int32)
     for p in range(P):
@@ -468,7 +531,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
         indptr[p, 1 : nl + 1] = np.cumsum(rows_indptr[p])
         indptr[p, nl + 1 :] = indptr[p, nl]
         gh, lo = ghosts_of[p], int(offs[p])
-        gvid[p, :nl] = np.arange(lo, lo + nl, dtype=np.int32)
+        gvid[p, :nl] = np.arange(lo, lo + nl, dtype=id_dt)
         gvid[p, n_local_max : n_local_max + len(gh)] = gh
         prio[p, :nl] = prio_global[lo : lo + nl]
         prio[p, n_local_max : n_local_max + len(gh)] = prio_global[gh]
@@ -483,7 +546,8 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
     # ELL form of the same adjacency: nbr[p, v, k] = k-th neighbour slot of v,
     # padded with the sentinel (color 0, ignored by the selection kernels).
     maxd = max(1, max(int(r.max(initial=0)) for r in rows_indptr))
-    check_int32_limits(g.n, n_local_max, maxd)  # before the ELL allocation
+    id_policy(g.n, n_local_max, maxd)  # before the ELL allocation: raises
+                                       # only past the int64 ceiling
     nbr = np.full((P, n_local_max, maxd), sentinel, dtype=np.int32)
     for p in range(P):
         deg_p = rows_indptr[p].astype(np.int64)
@@ -512,7 +576,7 @@ def partition_graph(g: Graph, P: int, *, seed: int = 0,
             cnt = np.bincount(row2, minlength=1)
             maxd2 = max(maxd2, int(cnt.max(initial=0)))
         maxd2 = max(1, maxd2)
-        check_int32_limits(g.n, n_local_max, maxd, maxd2)
+        id_policy(g.n, n_local_max, maxd, maxd2)
         nbr2 = np.full((P, n_local_max, maxd2), sentinel, dtype=np.int32)
         for p in range(P):
             row2, slot2 = slot2_rows[p]
@@ -593,8 +657,8 @@ def pad_partition(pg: PartitionedGraph, *, n_local_max: int | None = None,
     boundary = pad_axis(remap(pg.boundary), 1, new_mb, new_sent)
     ghost_owner = pad_axis(pg.ghost_owner, 1, new_mg, 0)
     ghost_slot = pad_axis(pg.ghost_slot, 1, new_mg, 0)
-    gvid = np.full((P, new_sent + 1), -1, dtype=np.int32)
-    prio = np.full((P, new_sent + 1), -1, dtype=np.int32)
+    gvid = np.full((P, new_sent + 1), -1, dtype=pg.gvid.dtype)
+    prio = np.full((P, new_sent + 1), -1, dtype=pg.prio.dtype)
     gvid[:, :old_nlm] = pg.gvid[:, :old_nlm]
     gvid[:, new_nlm:new_nlm + pg.max_ghost] = pg.gvid[:, old_nlm:old_sent]
     prio[:, :old_nlm] = pg.prio[:, :old_nlm]

@@ -57,9 +57,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ordering
-from .comm import (ALLGATHER, AUTO, SPARSE, AxisComm,
-                   allgather_bytes_per_exchange, run_sharded, run_sim,
-                   stats_to_host)
+from .comm import (ALLGATHER, AUTO, AXIS, SPARSE, AxisComm,
+                   allgather_bytes_per_exchange, batch_axis_of,
+                   batch_axis_size, mesh_axes, run_sharded, run_sharded_many,
+                   run_sim, shard_axis_of, stats_to_host)
 from .graph import PartitionedGraph, _ceil_pow2, bucket_graphs
 from .ordering import compute_order
 from .recolor import (ALL_PERMS, ND, PERM_IDS, RecolorConfig, class_sizes,
@@ -129,16 +130,26 @@ class PipelineConfig:
 
 
 def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
-                      P_size: int | None = None, plan_static=None):
+                      P_size: int | None = None, plan_static=None,
+                      axis: str = AXIS, lane_axes: tuple = ()):
     """K fused recoloring iterations in one ``lax.while_loop`` (per-shard).
 
     Each iteration folds ``it`` into ``key``, reads its permutation kind
     from the static schedule, and runs ``recolor_pass_spmd`` — bitwise the
     host loop's iteration, minus the host round-trip.  Returns
     ``(view, history (K, n_stats) int32, n_iters_run)``.
+
+    On a 2D ``batch × shard`` mesh (``lane_axes``, DESIGN.md §10) the loop
+    runs while *any* batch lane's adaptive stop holds — a recoloring
+    iteration is not idempotent, so a lane whose own stop tripped freezes
+    its entire carry (view, history, counters) while its body keeps
+    executing the mesh-uniform collective sequence for its peers.  This is
+    the shard_map form of what ``vmap`` of ``lax.while_loop`` already does
+    for same-device lanes (run-to-global-stop + select-mask), so lane
+    results stay bitwise the solo run's.
     """
     rcfg = cfg.recolor
-    comm = AxisComm()
+    comm = AxisComm(axis, lane_axes)
     n_local_max = arrs["indptr"].shape[0] - 1
     mc = rcfg.max_colors
     K = cfg.n_iters
@@ -171,12 +182,17 @@ def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
 
     def body(state):
         view, it, best, stall, hist, sizes, n_oor = state
+        # this lane's own adaptive stop: when it has tripped but a batch
+        # lane elsewhere on the mesh keeps the loop alive, the body still
+        # executes (uniform collectives) and the carry freezes below
+        lane_on = (it <= K) & (stall < patience)
         ikey = jax.random.fold_in(key, it)           # host loop's per-it key
         kid = kind_ids[it - 1]
         n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
         rank = rank_of(sizes, kid, ikey)
         view, st = recolor_pass_spmd(arrs, view, rank, n_classes, rcfg,
-                                     P_size=P_size, plan_static=plan_static)
+                                     P_size=P_size, plan_static=plan_static,
+                                     axis=axis, lane_axes=lane_axes)
         # post-iteration sizes double as the next iteration's schedule input
         # (local slots are final once the iteration ends, so this is bitwise
         # the class_sizes the host loop recomputes at its next call)
@@ -189,13 +205,15 @@ def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
         hist = jax.lax.dynamic_update_slice(hist, row[None],
                                             (it - 1, jnp.int32(0)))
         improved = nd_after < best
-        return (view, it + 1, jnp.minimum(best, nd_after),
-                jnp.where(improved, jnp.int32(0), stall + 1), hist, sizes,
-                oor_next)
+        new_state = (view, it + 1, jnp.minimum(best, nd_after),
+                     jnp.where(improved, jnp.int32(0), stall + 1), hist,
+                     sizes, oor_next)
+        return jax.tree.map(lambda n, o: jnp.where(lane_on, n, o),
+                            new_state, state)
 
     def cond(state):
         _, it, _, stall, _, _, _ = state
-        return (it <= K) & (stall < patience)
+        return comm.lane_uniform((it <= K) & (stall < patience))
 
     sizes0, oor0 = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
     state0 = (view, jnp.int32(1), jnp.int32(jnp.iinfo(jnp.int32).max),
@@ -206,18 +224,24 @@ def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
 
 def color_then_recolor(arrs, order, color_key, recolor_key,
                        cfg: PipelineConfig, P_size: int | None = None,
-                       plan_static=None):
+                       plan_static=None, axis: str = AXIS,
+                       lane_axes: tuple = ()):
     """The fused pipeline program (per-shard SPMD, jit/shard_map ready).
 
     Initial speculative coloring + K recoloring iterations, all device
-    resident.  Returns ``(view, color_stats, history, n_iters_run)``.
+    resident.  ``axis`` names the shard mesh axis of every collective;
+    ``lane_axes`` the batch axes of a 2D mesh whose lanes this program's
+    control flow must stay uniform over (DESIGN.md §10).
+    Returns ``(view, color_stats, history, n_iters_run)``.
     """
     assert cfg.color is not None, "color_then_recolor needs cfg.color"
     view, cstats = color_spmd(arrs, order, color_key, cfg.color,
-                              P_size=P_size, plan_static=plan_static)
+                              P_size=P_size, plan_static=plan_static,
+                              axis=axis, lane_axes=lane_axes)
     view, hist, n_run = recolor_loop_spmd(arrs, view, recolor_key, cfg,
                                           P_size=P_size,
-                                          plan_static=plan_static)
+                                          plan_static=plan_static, axis=axis,
+                                          lane_axes=lane_axes)
     return view, cstats, hist, n_run
 
 
@@ -275,9 +299,11 @@ class PlanSignature:
     part width quantization exists to stabilize — and ``scheme`` is the
     *resolved* exchange scheme (never "auto").  ``dims`` pins every input
     array's ``(name, shape, dtype)`` so signature equality is exactly as
-    strict as the jit trace, and ``cfg`` carries the full static config;
-    ``extra`` holds non-array trace context (the mesh, for sharded
-    programs).
+    strict as the jit trace, ``axes`` pins the mesh layout as ``((axis
+    name, axis size), ...)`` — two meshes with different axis names or
+    shapes lower different collectives, so they must not share a program —
+    and ``cfg`` carries the full static config; ``extra`` holds non-array
+    trace context (the mesh object, for sharded programs).
     """
 
     kind: str          # program family: pipe_sim | loop_sim | pipe_sharded
@@ -292,14 +318,16 @@ class PlanSignature:
     batch: int         # vmapped graph lanes (0 = solo program)
     cfg: object        # resolved PipelineConfig (trace-static)
     dims: tuple        # ((name, shape, dtype), ...) of every input array
+    axes: tuple = ()   # mesh layout ((axis name, axis size), ...)
     extra: object = None
 
     def describe(self) -> str:
         """The human-readable core (what ``dryrun --coloring`` reports)."""
+        axes = "×".join(f"{n}={s}" for n, s in self.axes) or "-"
         return (f"kind={self.kind} P={self.P} "
                 f"n_local_max={self.n_local_max} maxd={self.maxd} "
                 f"max_colors={self.max_colors} distance={self.distance} "
-                f"scheme={self.scheme} batch={self.batch} "
+                f"scheme={self.scheme} batch={self.batch} axes={axes} "
                 f"rungs={self.rungs[1] if self.rungs else ()}")
 
 
@@ -362,6 +390,12 @@ def _dims_of(arrs) -> tuple:
                         for k, v in arrs.items()))
 
 
+def _mesh_axes_or_sim(mesh, P: int) -> tuple:
+    """Signature ``axes``: the mesh layout, or the sim executor's implied
+    single vmap axis (``run_sim`` binds ``AXIS`` at size P)."""
+    return ((AXIS, P),) if mesh is None else mesh_axes(mesh)
+
+
 def _signature(kind: str, P: int, cfg: PipelineConfig, plan_static, arrs,
                batch: int = 0, extra=None) -> PlanSignature:
     mc = (cfg.color.max_colors if cfg.color is not None
@@ -371,7 +405,8 @@ def _signature(kind: str, P: int, cfg: PipelineConfig, plan_static, arrs,
         maxd=int(arrs["nbr"].shape[-1]), max_colors=mc,
         distance=cfg.recolor.distance, scheme=cfg.recolor.scheme,
         rungs=plan_static if plan_static is not None else (),
-        batch=batch, cfg=cfg, dims=_dims_of(arrs), extra=extra)
+        batch=batch, cfg=cfg, dims=_dims_of(arrs),
+        axes=_mesh_axes_or_sim(extra, P), extra=extra)
 
 
 def resolve_pipeline_cfg(pg: PartitionedGraph,
@@ -424,7 +459,8 @@ def bucket_signature(bucket, cfg: PipelineConfig, *, pad_batch: bool = True,
     """
     bcfg = _resolve_bucket_cfg(bucket, cfg)
     ma = bucket.member_arrays(0, sparse=bcfg.needs_sparse_plan)
-    B = _ceil_pow2(bucket.B) if pad_batch else bucket.B
+    lane_multiple = batch_axis_size(mesh) if mesh is not None else 1
+    B = _lane_target(bucket.B, pad_batch, lane_multiple)
 
     def dim(v):
         s = (B,) + tuple(v.shape)
@@ -441,7 +477,7 @@ def bucket_signature(bucket, cfg: PipelineConfig, *, pad_batch: bool = True,
         maxd=bucket.members[0].maxd, max_colors=mc,
         distance=bcfg.recolor.distance, scheme=bcfg.recolor.scheme,
         rungs=ps if ps is not None else (), batch=B, cfg=bcfg, dims=dims,
-        extra=mesh)
+        axes=_mesh_axes_or_sim(mesh, bucket.P), extra=mesh)
 
 
 def _bucket_scheme(bucket) -> str:
@@ -541,7 +577,9 @@ def pipeline_sim(pg: PartitionedGraph, order, cfg: PipelineConfig, *,
 
 def pipeline_sharded(pg: PartitionedGraph, order, cfg: PipelineConfig, mesh,
                      *, marked=None, color_key=None, recolor_key=None):
-    """Run the fused pipeline on a real mesh axis ``workers`` (shard_map)."""
+    """Run the fused pipeline on a real mesh shard axis
+    (``shard_axis_of(mesh)``) via shard_map; on a 2D ``batch × shard``
+    mesh the solo graph is replicated over the batch axis."""
     assert cfg.color is not None, "pipeline_sharded needs cfg.color"
     cfg = resolve_pipeline_cfg(pg, cfg)
     arrs = _pipeline_arrays(pg, cfg)
@@ -551,9 +589,12 @@ def pipeline_sharded(pg: PartitionedGraph, order, cfg: PipelineConfig, mesh,
     sig = _signature("pipe_sharded", pg.P, cfg, ps, arrs, extra=mesh)
 
     def build(P=pg.P):
-        fn = partial(color_then_recolor, cfg=cfg, P_size=P, plan_static=ps)
+        axis = shard_axis_of(mesh)
+        fn = partial(color_then_recolor, cfg=cfg, P_size=P, plan_static=ps,
+                     axis=axis)
         return jax.jit(_count_traces(
-            lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2))))
+            lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2),
+                                             axis=axis)))
 
     out = _PROGRAMS.get(sig, build)(arrs, jnp.asarray(order), ck, rk)
     return _pipeline_result(*out)
@@ -576,12 +617,22 @@ def _many_sim_program(sig, P, cfg, plan_static):
 def _many_sharded_program(sig, P, cfg, plan_static, mesh):
     """Cached mesh dispatch — without it every flush would rebuild the
     vmap/jit wrappers and recompile, defeating the pow2 shape bucketing
-    the serving path relies on."""
+    the serving path relies on.
+
+    On a 2D ``batch × shard`` mesh the graph lanes are *sharded* over the
+    batch axis (``run_sharded_many``): each device vmaps only its B/Bm
+    lanes, and the per-graph RNG keys ride as batch-sharded lane args.  On
+    a 1D mesh this degenerates to the classic vmap-inside-shard_map."""
     def build():
+        axis = shard_axis_of(mesh)
+        baxis = batch_axis_of(mesh)
+        lane_axes = (baxis,) if baxis is not None else ()
         fn = jax.vmap(partial(color_then_recolor, cfg=cfg, P_size=P,
-                              plan_static=plan_static))
+                              plan_static=plan_static, axis=axis,
+                              lane_axes=lane_axes))
         return jax.jit(_count_traces(
-            lambda a, o, k1, k2: run_sharded(fn, mesh, (a, o), (k1, k2))))
+            lambda a, o, k1, k2: run_sharded_many(fn, mesh, (a, o),
+                                                  (k1, k2), axis=axis)))
     return _PROGRAMS.get(sig, build)
 
 
@@ -636,14 +687,22 @@ def _bucket_order(bucket, cfg: PipelineConfig, orders, marked):
     return out
 
 
-def _pad_batch_lanes(st, order_b, cks_b, rks_b, B):
-    """Round the batch axis up to a power of two with dummy lanes.
+def _lane_target(B: int, pad_batch: bool, lane_multiple: int = 1) -> int:
+    """Padded lane count: pow2 under ``pad_batch``, and always a multiple
+    of ``lane_multiple`` (the batch mesh axis size — a 2D mesh shards the
+    lane axis, so it must divide evenly)."""
+    t = _ceil_pow2(B) if pad_batch else B
+    return -(-t // lane_multiple) * lane_multiple
+
+
+def _pad_batch_lanes(st, order_b, cks_b, rks_b, B, target):
+    """Pad the batch axis up to ``target`` lanes with dummy lanes.
 
     The extra lanes replicate member 0 (lanes are independent, results are
     dropped on unpacking), so a service's batch programs see pow2 batch
     shapes only and keep hitting the jit cache as queue depth fluctuates.
     """
-    ext = _ceil_pow2(B) - B
+    ext = target - B
     if ext:
         st = {k: np.concatenate([v, np.repeat(v[:1], ext, axis=0)])
               for k, v in st.items()}
@@ -654,15 +713,16 @@ def _pad_batch_lanes(st, order_b, cks_b, rks_b, B):
     return st, order_b, cks_b, rks_b
 
 
-def _bucket_inputs(bucket, cfg, orders, marked, cks, rks, pad_batch):
+def _bucket_inputs(bucket, cfg, orders, marked, cks, rks, pad_batch,
+                   lane_multiple: int = 1):
     """Per-bucket dispatch inputs, shared by the sim and sharded drivers."""
     st = bucket.stacked_arrays(sparse=cfg.needs_sparse_plan)
     order_b = _bucket_order(bucket, cfg, orders, marked)
     cks_b = [cks[i] for i in bucket.indices]
     rks_b = [rks[i] for i in bucket.indices]
-    if pad_batch:
-        st, order_b, cks_b, rks_b = _pad_batch_lanes(
-            st, order_b, cks_b, rks_b, bucket.B)
+    st, order_b, cks_b, rks_b = _pad_batch_lanes(
+        st, order_b, cks_b, rks_b, bucket.B,
+        _lane_target(bucket.B, pad_batch, lane_multiple))
     ps = bucket.plan_static if cfg.needs_sparse_plan else None
     return st, order_b, cks_b, rks_b, ps
 
@@ -731,10 +791,13 @@ def color_many(pgs, cfg: PipelineConfig, *, orders=None, marked=None,
 def color_many_sharded(pgs, cfg: PipelineConfig, mesh, *, orders=None,
                        marked=None, color_keys=None, recolor_keys=None,
                        buckets=None, pad_batch: bool = False):
-    """``color_many`` on a real mesh axis ``workers``: the graph batch axis
-    rides *inside* each shard (vmap under shard_map), so one collective
-    program serves the whole bucket — same per-graph results as the sim
-    executor."""
+    """``color_many`` on a real mesh: collectives run over the mesh's
+    shard axis (``shard_axis_of``).  On a 1D mesh the graph batch axis
+    rides *inside* each shard (vmap under shard_map); on a 2D ``batch ×
+    shard`` mesh (``make_coloring_mesh(P, batch=Bm)``) the lanes are
+    additionally sharded over the batch axis — each device vmaps B/Bm
+    lanes, and lane counts are padded to a multiple of Bm.  Either way
+    every per-graph result is bitwise the sim executor's."""
     assert cfg.color is not None, "color_many_sharded needs cfg.color"
     pgs = list(pgs)
     if buckets is None:
@@ -744,7 +807,8 @@ def color_many_sharded(pgs, cfg: PipelineConfig, mesh, *, orders=None,
     for bi, bucket in enumerate(buckets):
         bcfg = _resolve_bucket_cfg(bucket, cfg)
         st, order_b, cks_b, rks_b, ps = _bucket_inputs(
-            bucket, bcfg, orders, marked, cks, rks, pad_batch)
+            bucket, bcfg, orders, marked, cks, rks, pad_batch,
+            lane_multiple=batch_axis_size(mesh))
         # leading axis P for shard_map; per-shard arrays carry (B, ...)
         arrs = {k: jnp.moveaxis(jnp.asarray(v), 0, 1) for k, v in st.items()}
         order_b = jnp.moveaxis(jnp.asarray(order_b), 0, 1)

@@ -62,8 +62,8 @@ from repro.kernels import ops
 
 from .comm import (AUTO, AXIS, DEFAULT_SCHEME, SCHEME_CHOICES, SCHEMES,
                    SPARSE, AxisComm, CommConfig, exchange_boundary,
-                   make_exchange, run_sharded, run_sim, shard_uniform,
-                   stats_to_host)
+                   make_exchange, run_sharded, run_sim, shard_axis_of,
+                   shard_uniform, stats_to_host)
 from .graph import PartitionedGraph
 from .speculative import (ColorConfig, _compact_order, _plan_static,
                           color_spmd, resolve_cfg, validate_color_bounds)
@@ -285,7 +285,8 @@ def _needed_exchange_rounds(step_of, arrs, n_local_max: int, K,
 
 
 def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
-                      P_size: int | None = None, plan_static=None):
+                      P_size: int | None = None, plan_static=None,
+                      axis: str = AXIS, lane_axes: tuple = ()):
     """One synchronous recoloring iteration given a precomputed class rank.
 
     The shared core of ``recolor_spmd`` (static permutation kind) and the
@@ -305,8 +306,16 @@ def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
     exchange event ships (``_needed_exchange_rounds``) — a link with nothing
     pending costs nothing.  ``P_size``/``plan_static`` are required for the
     sparse scheme (the drivers thread them automatically).
+
+    ``lane_axes`` (2D ``batch × shard`` meshes, DESIGN.md §10): graph lanes
+    on different batch rows have different class counts and piggyback
+    schedules, so the chunk trip count and every exchange gate widen to the
+    lane-uniform union (``AxisComm.lane_uniform``) — every device executes
+    the same collective sequence — while each lane applies ghost refreshes
+    and byte accounting under its *own* schedule, keeping per-lane results
+    bitwise the solo run's.
     """
-    comm = AxisComm()
+    comm = AxisComm(axis, lane_axes)
     # contract: callers derive n_classes from psum-reduced class sizes, so
     # the per-class chunk schedule (and with it every exchange event) is
     # identical on all shards
@@ -393,18 +402,30 @@ def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
         is_last = (ci + 1) == cum[t]
         is_end = t == n_classes
         do_ex = is_last & (needed[jnp.minimum(t, mc)] | is_end)
+        # execute under the lane-uniform gate, apply under the lane's own:
+        # a batch-row peer's exchange event must run here too (same
+        # ppermute sequence mesh-wide), but this lane's ghosts only
+        # refresh on its own schedule — early refreshes would de-stale
+        # ghost colors the solo run still reads old
+        go_ex = comm.lane_uniform(do_ex)
         if sparse:
-            mask = needed_rounds[jnp.minimum(t, mc)] | is_end
-            ex = lambda v: exchange(v, round_mask=mask)
+            mask = (needed_rounds[jnp.minimum(t, mc)] | is_end) & do_ex
+            ex = lambda v: exchange(v, round_mask=comm.lane_uniform(mask),
+                                    apply_mask=mask)
         else:
             ex = exchange
-        new_view, b = jax.lax.cond(do_ex, ex,
-                                   lambda v: (v, jnp.int32(0)), new_view)
-        return new_view, n_ex + do_ex.astype(jnp.int32), n_bytes + b
+        ex_view, b = jax.lax.cond(go_ex, ex,
+                                  lambda v: (v, jnp.int32(0)), new_view)
+        new_view = jnp.where(do_ex, ex_view, new_view)
+        return (new_view, n_ex + do_ex.astype(jnp.int32),
+                n_bytes + jnp.where(do_ex, b, 0))
 
     new_view0 = jnp.zeros((n_slots,), jnp.int32)
+    # mesh-wide trip count: chunks past this lane's cum[mc] visit no active
+    # rows (and never gate an exchange), so they are exact no-ops
     new_view, n_ex, n_bytes = jax.lax.fori_loop(
-        0, cum[mc], chunk_body, (new_view0, jnp.int32(0), jnp.int32(0)))
+        0, comm.lane_uniform(cum[mc]), chunk_body,
+        (new_view0, jnp.int32(0), jnp.int32(0)))
 
     local_max = jnp.max(jnp.where(valid_local, new_view[:n_local_max], 0))
     stats = dict(
@@ -418,7 +439,8 @@ def recolor_pass_spmd(arrs, view, rank, n_classes, cfg: RecolorConfig,
 
 
 def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
-                 P_size: int | None = None, plan_static=None):
+                 P_size: int | None = None, plan_static=None,
+                 axis: str = AXIS):
     """One synchronous recoloring iteration (per-shard SPMD).
 
     `view` is a valid coloring (n_slots,) with fresh ghosts. Returns the new
@@ -428,14 +450,15 @@ def recolor_spmd(arrs, view, key, perm_kind: str, cfg: RecolorConfig,
     instead of recomputing it (bitwise the same array) — here the stand-alone
     call computes both ends itself.
     """
-    comm = AxisComm()
+    comm = AxisComm(axis)
     n_local_max = arrs["indptr"].shape[0] - 1
     sizes, n_oor = class_sizes(view, arrs["n_local"], n_local_max,
                                cfg.max_colors, comm)
     n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
     rank = permutation_rank(sizes, perm_kind, key)
     new_view, stats = recolor_pass_spmd(arrs, view, rank, n_classes, cfg,
-                                        P_size=P_size, plan_static=plan_static)
+                                        P_size=P_size, plan_static=plan_static,
+                                        axis=axis)
     sizes_after, _ = class_sizes(new_view, arrs["n_local"], n_local_max,
                                  cfg.max_colors, comm)
     # distinct classes actually in use — the paper's quality metric (the max
@@ -459,9 +482,9 @@ def arc_order_spmd(view, n_local, n_local_max, rank):
 
 def arc_spmd(arrs, view, key, perm_kind: str, rc_cfg: RecolorConfig,
              sp_cfg: ColorConfig, P_size: int | None = None,
-             plan_static=None):
+             plan_static=None, axis: str = AXIS):
     """One asynchronous recoloring iteration: local class order + speculative."""
-    comm = AxisComm()
+    comm = AxisComm(axis)
     n_local_max = arrs["indptr"].shape[0] - 1
     mc = rc_cfg.max_colors
     sizes, n_oor = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
@@ -472,7 +495,7 @@ def arc_spmd(arrs, view, key, perm_kind: str, rc_cfg: RecolorConfig,
     rank = permutation_rank(sizes, perm_kind, k_rank)
     order = arc_order_spmd(view, arrs["n_local"], n_local_max, rank)
     new_view, stats = color_spmd(arrs, order, k_repair, sp_cfg, P_size=P_size,
-                                 plan_static=plan_static)
+                                 plan_static=plan_static, axis=axis)
     stats["n_out_of_range"] = n_oor
     return new_view, stats
 
@@ -537,17 +560,18 @@ def arc_sim(pg: PartitionedGraph, view, perm_kind: str, rc_cfg: RecolorConfig,
 
 def recolor_sharded(pg: PartitionedGraph, view, perm_kind: str,
                     cfg: RecolorConfig, mesh, key=None):
-    """``recolor_sim`` on a real mesh axis ``workers`` (same contract,
-    bitwise-identical results)."""
+    """``recolor_sim`` on a real mesh shard axis (``shard_axis_of(mesh)``;
+    same contract, bitwise-identical results)."""
     cfg = resolve_cfg(pg, cfg)
     arrs = {k: jnp.asarray(v) for k, v in
             pg.arrays(sparse=cfg.scheme == SPARSE).items()}
     if key is None:
         key = _default_key(cfg.seed)
+    axis = shard_axis_of(mesh)
     fn = partial(recolor_spmd, perm_kind=perm_kind, cfg=cfg, P_size=pg.P,
-                 plan_static=_plan_static(pg, cfg))
+                 plan_static=_plan_static(pg, cfg), axis=axis)
     new_view, stats = jax.jit(
-        lambda a, v, k: run_sharded(fn, mesh, (a, v), (k,)))(
+        lambda a, v, k: run_sharded(fn, mesh, (a, v), (k,), axis=axis))(
             arrs, jnp.asarray(view), key)
     return new_view, stats_to_host(stats)
 

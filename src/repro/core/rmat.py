@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .graph import Graph, _unique_pairs
+from .graph import Graph, _unique_pairs, id_policy
 
 
 def _dedup_edges(u: np.ndarray, v: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -31,16 +31,17 @@ def _dedup_edges(u: np.ndarray, v: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 
 def _edges_to_graph(n: int, src: np.ndarray, dst: np.ndarray) -> Graph:
     """Symmetrize + dedup an edge list into CSR."""
-    # Graph.indices is int32 — that storage bound, not the dedup, is what
-    # caps the vertex count; fail loudly instead of wrapping ids negative.
-    assert n <= 2**31, f"n={n} exceeds the int32 CSR id range"
+    # CSR id width comes from the id policy: int32 below the 2**31 vertex
+    # bound, int64 past it (only the int64 ceiling still fails loudly).
+    pol = id_policy(n, 1, 1)
     keep = src != dst
     src, dst = src[keep], dst[keep]
     u, v = _dedup_edges(np.concatenate([src, dst]), np.concatenate([dst, src]))
     indptr = np.zeros(n + 1, dtype=np.int64)
     np.add.at(indptr, u.astype(np.int64) + 1, 1)
     indptr = np.cumsum(indptr)
-    return Graph(n=n, indptr=indptr.astype(np.int64), indices=v.astype(np.int32))
+    return Graph(n=n, indptr=indptr.astype(np.int64),
+                 indices=v.astype(pol.id_dtype))
 
 
 def rmat(
@@ -67,8 +68,8 @@ def rmat(
         down = ((r >= a) & (r < a + b)) | (r >= a + b + c)
         src = src * 2 + right.astype(np.int64)
         dst = dst * 2 + down.astype(np.int64)
-    # ids stay int64 through the dedup; _edges_to_graph guards the int32
-    # CSR bound (scale 31 is the hard ceiling of the storage format)
+    # ids stay int64 through the dedup; _edges_to_graph picks the CSR id
+    # width from id_policy (int32 below scale 31, int64 past it)
     return _edges_to_graph(n, src, dst)
 
 

@@ -73,7 +73,7 @@ from repro.kernels import ops
 from . import selection as sel
 from .comm import (AUTO, AXIS, DEFAULT_SCHEME, SCHEME_CHOICES, SCHEMES,
                    SPARSE, AxisComm, CommConfig, make_exchange, resolve_scheme,
-                   run_sharded, run_sim, stats_to_host)
+                   run_sharded, run_sim, shard_axis_of, stats_to_host)
 from .graph import PartitionedGraph
 
 
@@ -315,14 +315,21 @@ def _compact_order(order, view):
 
 
 def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
-               plan_static=None):
+               plan_static=None, axis: str = AXIS, lane_axes: tuple = ()):
     """Per-shard SPMD speculative coloring. Returns (view, stats dict).
 
     ``P_size``/``plan_static`` (``PartitionedGraph.comm_plan.static``) are
     required for the sparse exchange scheme — the ``ppermute`` round
-    schedule is static; the drivers thread them automatically.
+    schedule is static; the drivers thread them automatically.  ``axis``
+    names the shard mesh axis all collectives run over (``shard_axis_of``
+    derives it from a mesh; defaults to ``"workers"``); ``lane_axes`` the
+    batch mesh axes control flow must additionally be uniform over on a 2D
+    ``batch × shard`` mesh (``AxisComm.lane_uniform``, DESIGN.md §10) —
+    loop trip counts and exchange gates widen to the mesh-wide maximum
+    while every lane masks the *application* with its own local predicate,
+    so per-lane results (view, stats) stay bitwise the solo run's.
     """
-    comm = AxisComm()
+    comm = AxisComm(axis, lane_axes)
     n_local_max = arrs["indptr"].shape[0] - 1
     n_slots = arrs["prio"].shape[0]
     p_idx = comm.index()
@@ -353,10 +360,14 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
     usage0 = jnp.zeros((cfg.max_colors,), jnp.int32)
 
     def round_body(state):
-        view, usage, rnd, _, n_ex, n_bytes = state
+        view, usage, rnd, n_conf_in, n_ex, n_bytes, n_rnd = state
         order_r, n_need = _compact_order(order, view)
         n_need_max = comm.pmax(n_need)
         n_steps = (n_need_max + S - 1) // S
+        # mesh-wide trip count: every batch lane executes the same number
+        # of superstep chunks (chunks past a lane's own frontier only read
+        # already-colored rows — the view[v] == 0 guard makes them no-ops)
+        n_steps_all = (comm.lane_uniform(n_need_max) + S - 1) // S
         rkey = jax.random.fold_in(jax.random.fold_in(key, rnd), p_idx)
         rand_u32 = jax.random.bits(rkey, (n_slots,), jnp.uint32)
         order_pad = jnp.concatenate(
@@ -384,31 +395,41 @@ def color_spmd(arrs, order, key, cfg: ColorConfig, P_size: int | None = None,
             pending = pending | chunk_bnd[si]
             due = ((si + 1) % cfg.exchange_every == 0) | (si == n_steps - 1)
             do_ex = due & pending
-            view, b = jax.lax.cond(do_ex, exchange, no_ex, view)
+            # execute under the lane-uniform gate (a lane never skips a
+            # ppermute its batch-row peers run), apply under the lane's own
+            new_view, b = jax.lax.cond(comm.lane_uniform(do_ex), exchange,
+                                       no_ex, view)
+            view = jnp.where(do_ex, new_view, view)
             return (view, usage, n_ex + do_ex.astype(jnp.int32),
-                    n_bytes + b, pending & ~do_ex)
+                    n_bytes + jnp.where(do_ex, b, 0), pending & ~do_ex)
 
         view, usage, n_ex, n_bytes, _ = jax.lax.fori_loop(
-            0, n_steps, superstep,
+            0, n_steps_all, superstep,
             (view, usage, n_ex, n_bytes, jnp.bool_(False)))
         view, n_conf, bnd_conf = _detect_conflicts_frontier(
             view, arrs, order_pad, n_steps, n_need, S, backend=cfg.backend,
             distance=cfg.distance)
         # publish uncolorings only if a boundary vertex lost somewhere
         do_final = comm.pmax(bnd_conf)
-        view, b = jax.lax.cond(do_final, exchange, no_ex, view)
+        new_view, b = jax.lax.cond(comm.lane_uniform(do_final), exchange,
+                                   no_ex, view)
+        view = jnp.where(do_final, new_view, view)
         n_conf = comm.psum(n_conf)
+        # per-lane round count: a converged lane riding out its batch-row
+        # peers' extra rounds (no-op bodies) must not count them
         return (view, usage, rnd + 1, n_conf,
-                n_ex + do_final.astype(jnp.int32), n_bytes + b)
+                n_ex + do_final.astype(jnp.int32),
+                n_bytes + jnp.where(do_final, b, 0),
+                n_rnd + (n_conf_in > 0).astype(jnp.int32))
 
     def cond(state):
-        _, _, rnd, n_conf, _, _ = state
-        return (n_conf > 0) & (rnd < cfg.max_rounds)
+        _, _, rnd, n_conf, _, _, _ = state
+        return comm.lane_uniform(n_conf > 0) & (rnd < cfg.max_rounds)
 
     state0 = (view0, usage0, jnp.int32(0), jnp.int32(1), jnp.int32(0),
-              jnp.int32(0))
+              jnp.int32(0), jnp.int32(0))
     # round 0 must run: seed n_conf=1
-    view, usage, n_rounds, _, n_ex, n_bytes = jax.lax.while_loop(
+    view, usage, _, _, n_ex, n_bytes, n_rounds = jax.lax.while_loop(
         cond, round_body, state0)
 
     local_max = jnp.max(view[:n_local_max])
@@ -501,8 +522,9 @@ def color_graph_sim(pg: PartitionedGraph, order, cfg: ColorConfig,
 
 def color_graph_sharded(pg: PartitionedGraph, order, cfg: ColorConfig, mesh,
                         key=None, *, marked=None):
-    """Run distributed coloring on a real mesh axis ``workers``
-    (shard_map); same contract and bitwise the same results as
+    """Run distributed coloring on a real mesh shard axis
+    (``shard_axis_of(mesh)``, ``"workers"`` on the standard meshes) via
+    shard_map; same contract and bitwise the same results as
     ``color_graph_sim``."""
     cfg = resolve_cfg(pg, cfg)
     arrs = {k: jnp.asarray(v) for k, v in
@@ -510,9 +532,10 @@ def color_graph_sharded(pg: PartitionedGraph, order, cfg: ColorConfig, mesh,
     if key is None:
         key = jax.random.key(cfg.seed)
     order = _apply_partial(order, cfg, marked)
+    axis = shard_axis_of(mesh)
     fn = partial(color_spmd, cfg=cfg, P_size=pg.P,
-                 plan_static=_plan_static(pg, cfg))
+                 plan_static=_plan_static(pg, cfg), axis=axis)
     view, stats = jax.jit(
-        lambda a, o, k: run_sharded(fn, mesh, (a, o), (k,)))(
+        lambda a, o, k: run_sharded(fn, mesh, (a, o), (k,), axis=axis))(
             arrs, jnp.asarray(order), key)
     return view, stats_to_host(stats)

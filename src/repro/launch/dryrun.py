@@ -31,7 +31,8 @@ import jax
 
 from repro import compat
 from repro.configs import SHAPES, get_arch, list_archs, shape_applicable
-from repro.launch.mesh import make_production_mesh, make_worker_mesh
+from repro.launch.mesh import (make_coloring_mesh, make_production_mesh,
+                               make_worker_mesh)
 from repro.launch.steps import input_specs
 from repro.roofline import analyze_hlo, model_flops, roofline_terms
 
@@ -231,7 +232,43 @@ def dryrun_coloring(*, multi_pod: bool, out_dir: Path,
             coll_count=analysis_pipe["coll_count"],
             coll_bytes=analysis_pipe["coll_bytes"],
         )
+        # 2D batch × shard mesh (DESIGN.md §10): the batched pipeline with
+        # graph lanes sharded over the ``batch`` mesh axis and partitions
+        # over ``workers`` — the weak-scaling serving layout.  batch=2 at
+        # P=256 (uses all 512 host devices); the multi-pod cell keeps
+        # batch=1 (512 shards already occupy every device) but still runs
+        # the 2D program structure.
+        from repro.core.comm import (batch_axis_of, mesh_axes,
+                                     run_sharded_many, shard_axis_of)
+        Bm = 1 if multi_pod else 2
+        mesh2d = make_coloring_mesh(P, batch=Bm)
+        axis2 = shard_axis_of(mesh2d)
+        B = 2                                     # lanes (a multiple of Bm)
+        arrs_b = {k: jnp.repeat(v[:, None], B, axis=1)
+                  for k, v in arrs.items()}
+        order_b = jnp.repeat(order[:, None], B, axis=1)
+        keys_b = jax.random.split(key, B)
+        pfn2 = jax.vmap(partial(color_then_recolor, cfg=pcfg, P_size=P,
+                                axis=axis2,
+                                lane_axes=(batch_axis_of(mesh2d),)))
+        t_2d = time.time()
+        compiled_2d = jax.jit(
+            lambda a, o, k1, k2: run_sharded_many(
+                pfn2, mesh2d, (a, o), (k1, k2), axis=axis2)).lower(
+                    arrs_b, order_b, keys_b, keys_b).compile()
+        analysis_2d = analyze_hlo(compiled_2d.as_text())
+        mesh2d_rec = dict(
+            axes=[[n, s] for n, s in mesh_axes(mesh2d)], batch_lanes=B,
+            compile_s=round(time.time() - t_2d, 2),
+            coll_count=analysis_2d["coll_count"],
+            coll_bytes=analysis_2d["coll_bytes"],
+        )
+        print(f"[coloring P={P}] 2D mesh "
+              f"{'×'.join(f'{n}={s}' for n, s in mesh_axes(mesh2d))}: "
+              f"batched pipeline lowered, "
+              f"{analysis_2d['coll_count']} collectives")
         rec.update(
+            mesh2d=mesh2d_rec,
             status="ok", n_chips=P, compile_s=round(time.time() - t0, 2),
             color_coll_count=analysis["coll_count"],
             color_coll_bytes=analysis["coll_bytes"],

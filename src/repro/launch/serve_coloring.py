@@ -120,9 +120,12 @@ class ColoringService:
     Request RNG keys fold the *request id* into the config seeds, so a
     request's coloring does not depend on which route or batch position
     served it.  ``mesh=None`` uses the sim executor (P vmap lanes on one
-    device); a mesh with a ``workers`` axis routes through
-    ``color_many_sharded``.  ``stats()`` exposes the router counters and
-    the process-wide program-cache counters.
+    device); a built mesh or a ``launch.mesh.MeshSpec`` (built here)
+    routes through ``color_many_sharded`` over the mesh's shard axis
+    (``core.shard_axis_of``) — a 2D ``MeshSpec.coloring(P, batch)`` mesh
+    additionally shards the batch lane's graph axis over its ``batch``
+    mesh axis.  ``stats()`` exposes the router counters and the
+    process-wide program-cache counters.
     """
 
     def __init__(self, *, P: int = 4, cfg: PipelineConfig | None = None,
@@ -132,6 +135,8 @@ class ColoringService:
         self.P = P
         self.cfg = cfg or default_config()
         self.order_kind = order_kind
+        if mesh is not None and hasattr(mesh, "build"):   # a MeshSpec
+            mesh = mesh.build()
         self.mesh = mesh
         self.max_batch = max_batch
         self.validate = validate

@@ -29,6 +29,7 @@ from typing import Any
 PEAK_FLOPS = 197e12        # bf16 TFLOP/s per chip (TPU v5e)
 HBM_BW = 819e9             # B/s per chip
 LINK_BW = 50e9             # B/s per ICI link
+HBM_BYTES = 16e9           # HBM capacity per chip (TPU v5e)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -271,6 +272,69 @@ def roofline_terms(analysis: dict[str, Any], *, n_links: int = 4) -> dict:
     total = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
     terms["roofline_fraction"] = terms["compute_s"] / total if total else 0.0
     return terms
+
+
+def coloring_memory_projection(n_global: int, P: int, maxd: int, *,
+                               maxd2: int = 0, ghost_frac: float = 0.5,
+                               boundary_frac: float = 0.5,
+                               batch: int = 1) -> dict:
+    """Per-shard device bytes of the coloring layout under the id policy.
+
+    Projects the ``PartitionedGraph.arrays()`` footprint for a graph of
+    ``n_global`` vertices block-partitioned over ``P`` shards at max degree
+    ``maxd`` (``maxd2`` adds the distance-2 ELL halo) — *without*
+    allocating anything, so the int64 giant-graph regime (RMAT scale
+    30+) can be sized on paper.  Id widths come from
+    ``core.graph.id_policy``: the per-shard slot arrays (ELL neighbours,
+    CSR columns, boundary/ghost tables) stay int32 at any global size —
+    they index slots, not global ids — so promotion past the 2**31 vertex
+    bound only widens the id-carrying arrays (``prio``/``gvid``) and the
+    gather-index temporaries, and the projection makes that visible as
+    ``promoted_extra_bytes``.
+
+    ``ghost_frac``/``boundary_frac`` model the halo as a fraction of the
+    local block (0.5 matches the repo's RMAT partitions at CPU scale;
+    structured meshes sit far lower).  ``batch`` multiplies the working
+    views (the batched pipeline holds one view per lane).  Returns the
+    per-array byte dict plus totals and the HBM occupancy fraction.
+    """
+    import numpy as np                       # lazy: keep roofline import-light
+
+    from repro.core.graph import id_policy
+
+    n_local = -(-n_global // P)
+    pol = id_policy(n_global, n_local, maxd, maxd2)
+    n_ghost = int(n_local * ghost_frac)
+    n_boundary = int(n_local * boundary_frac)
+    n_slots = n_local + n_ghost + 1
+    m_local = n_local * maxd
+    id_b = pol.id_itemsize
+    lanes = max(batch, 1)
+    per = dict(
+        nbr=n_local * maxd * 4,             # ELL neighbour slots: int32
+        nbr2=n_local * maxd2 * 4,           # distance-2 ELL halo
+        indices=m_local * 4,                # CSR column slots: int32
+        edge_src=m_local * 4,
+        indptr=(n_local + 1) * 4,
+        prio=n_slots * id_b,                # global priorities: id-width
+        gvid=n_slots * id_b,                # global-id map: id-width
+        boundary=n_boundary * 4,
+        ghost_tables=2 * n_ghost * 4,       # ghost_owner + ghost_slot
+        degree_flags=n_local * 5,           # degree (int32) + is_internal
+        views=n_slots * 4 * lanes,          # working color views per lane
+    )
+    total = sum(per.values())
+    # what the same layout would cost if ids stayed int32 (the gap is the
+    # whole price of the int64 promotion)
+    extra = (n_slots * (id_b - 4)) * 2 if pol.promoted else 0
+    return dict(
+        n_global=int(n_global), P=int(P), n_local_max=int(n_local),
+        maxd=int(maxd), maxd2=int(maxd2), batch=lanes,
+        id_dtype=np.dtype(pol.id_dtype).name,
+        ell_dtype=np.dtype(pol.ell_dtype).name,
+        promoted=pol.promoted, promoted_extra_bytes=int(extra),
+        per_shard_bytes=per, total_per_shard=int(total),
+        hbm_fraction=total / HBM_BYTES, fits_hbm=total <= HBM_BYTES)
 
 
 def model_flops(arch, shape) -> float:

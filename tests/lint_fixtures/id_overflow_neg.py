@@ -21,3 +21,11 @@ def size_by_size(n_local_max, maxd, n):
 
 def plain_sum(u, v):
     return u + v                            # no multiplicative packing
+
+
+def policy_packing(u, v, n, pol):
+    return u.astype(pol.id_dtype) * n + v   # id_policy picks the width
+
+
+def policy_ell_packing(row, stride, idx, pol):
+    return row.astype(pol.ell_dtype) * stride + idx

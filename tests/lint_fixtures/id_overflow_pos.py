@@ -17,3 +17,8 @@ def grid3d_vertex_id(ii, jj, kk, ny, nz):
 
 def cell_key(cid, grid_n):
     return cid[:, 0] * grid_n + cid[:, 1]   # FIRE: subscripted id operands
+
+
+def policy_bypassed(u, v, n, pol):
+    del pol                                 # policy in scope but unused
+    return u * n + v                        # FIRE: packing bypasses id_policy
