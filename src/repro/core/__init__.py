@@ -34,15 +34,19 @@ from .comm import (AUTO, AXIS, BATCH_AXIS, SCHEME_CHOICES, SCHEMES, AxisComm,
                    stats_to_host)
 from .graph import (CommPlan, Graph, GraphBucket, IdPolicy, PartitionedGraph,
                     bucket_graphs, build_comm_plan, check_int32_limits,
-                    id_policy, pad_partition, partition_graph)
+                    id_policy, pad_partition, partition_graph, plan_fits,
+                    remap_plan_arrays)
 from .ordering import compute_order
 from .piggyback import MessageStats, message_stats
 from .pipeline import (PipelineConfig, PlanSignature, bucket_signature,
                        color_many, color_many_sharded, color_then_recolor,
-                       pipeline_sharded, pipeline_sim, plan_signature,
+                       engine_init_program, engine_put_program,
+                       engine_step_program,
+                       pipeline_carry_spmd, pipeline_sharded, pipeline_sim,
+                       pipeline_step_spmd, plan_signature,
                        program_cache_clear, program_cache_contains,
-                       program_cache_stats, recolor_loop_sim,
-                       resolve_pipeline_cfg)
+                       program_cache_stats, recolor_carry_init,
+                       recolor_loop_sim, resolve_pipeline_cfg)
 from .recolor import (ND, NI, RAND, RV, RecolorConfig, arc_sim,
                       recolor_iterations, recolor_sharded, recolor_sim,
                       schedule_for_iteration)
@@ -60,12 +64,14 @@ __all__ = [
     "build_comm_plan", "check_coloring", "check_int32_limits",
     "bucket_signature", "color_graph_sharded", "color_graph_sim",
     "color_many", "color_many_sharded", "color_spmd", "color_then_recolor",
-    "colors_from_views", "compute_order", "id_policy", "mesh_axes",
+    "colors_from_views", "compute_order", "engine_init_program",
+    "engine_put_program", "engine_step_program", "id_policy", "mesh_axes",
     "message_stats", "ordering",
-    "pad_partition", "partition_graph", "pipeline_sharded", "pipeline_sim",
-    "plan_signature", "presets", "program_cache_clear",
-    "program_cache_contains", "program_cache_stats", "recolor_iterations",
-    "recolor_loop_sim",
+    "pad_partition", "partition_graph", "pipeline_carry_spmd",
+    "pipeline_sharded", "pipeline_sim", "pipeline_step_spmd",
+    "plan_fits", "plan_signature", "presets", "program_cache_clear",
+    "program_cache_contains", "program_cache_stats", "recolor_carry_init",
+    "recolor_iterations", "recolor_loop_sim", "remap_plan_arrays",
     "recolor_sharded", "recolor_sim", "resolve_pipeline_cfg",
     "resolve_scheme", "rmat", "schedule_for_iteration", "select_colors",
     "select_colors_d2", "selection", "shard_axis_of", "stats_to_host",

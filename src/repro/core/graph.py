@@ -679,52 +679,82 @@ def pad_partition(pg: PartitionedGraph, *, n_local_max: int | None = None,
         nbr2=nbr2)
 
 
+def plan_fits(plan: CommPlan, static: tuple) -> bool:
+    """True iff ``plan`` embeds into the target ``(shifts, widths)`` schedule.
+
+    Fits = every traffic-bearing ring shift of ``plan`` exists in the
+    target and the target's (pow2-rung) buffer width covers the plan's.
+    A fitting partition can execute the target's compiled exchange rounds
+    bitwise-inertly (sentinel rows on foreign rounds, exact
+    ``round_widths`` as data) — the admission gate the continuous serving
+    engine probes before swapping a new graph into a freed lane
+    (DESIGN.md §11).
+    """
+    shifts, widths = static
+    w = dict(zip(shifts, widths))
+    return all(k in w and pw <= w[k]
+               for k, pw in zip(plan.shifts, plan.widths))
+
+
+def remap_plan_arrays(pg, static: tuple) -> dict[str, np.ndarray]:
+    """``pg``'s sparse-plan arrays re-laid onto a target static schedule.
+
+    Rounds ``pg`` has no traffic on get an all-sentinel send row (its
+    ghosts never match the shift, so the round cannot move its view) and a
+    zero in its ``round_widths`` vector — the traced byte-accounting
+    override (``comm.exchange_sparse``) that keeps the measured
+    ``wire_bytes`` identical to a solo run under ``pg``'s own *exact*
+    plan.  This is the mechanism behind both the batched bucket's shared
+    schedule (``_union_comm_arrays``) and the serving engine's mid-flight
+    lane admission: the target schedule is trace-static, the member's
+    rounds are data.  Raises ``ValueError`` when ``plan_fits`` is False.
+    """
+    shifts, widths = static
+    pl = pg.comm_plan
+    if not plan_fits(pl, static):
+        raise ValueError(f"comm plan {pl.static} does not fit the target "
+                         f"schedule {static}")
+    P = pg.P
+    max_send = max(widths, default=0)
+    n_rounds = max(len(shifts), 1)
+    s2r = np.full((P,), -1, dtype=np.int32)
+    for r, k in enumerate(shifts):
+        s2r[k] = r
+    w = dict(zip(pl.shifts, pl.widths))
+    ex = dict(zip(pl.shifts, pl.exact_widths))
+    send = np.full((P, n_rounds, max(max_send, 1)), pg.sentinel, np.int32)
+    rw = np.zeros((n_rounds,), np.int32)
+    for r, k in enumerate(shifts):
+        if k in w:
+            rm = pl.shifts.index(k)
+            send[:, r, :pl.send_slot.shape[2]] = pl.send_slot[:, rm]
+            rw[r] = ex[k]
+    return dict(
+        send_slot=send, ghost_shift=pl.ghost_shift, ghost_pos=pl.ghost_pos,
+        shift_to_round=np.broadcast_to(s2r, (P, P)).copy(),
+        round_widths=np.broadcast_to(rw, (P, n_rounds)).copy())
+
+
 def _union_comm_arrays(members) -> tuple[tuple, list[dict[str, np.ndarray]]]:
     """One shared sparse round schedule for a bucket of padded partitions.
 
     The sparse exchange unrolls a *static* ``(shifts, widths)`` schedule
     (part of the jit cache key), so every graph in a batch must execute the
     same rounds.  The shared schedule is the union of the members' ring
-    shifts, each padded to the bucket-max (pow2-rung) buffer width.  A
-    member without traffic on some shift gets an all-sentinel send row for
-    that round (its ghosts never match the shift, so the round cannot move
-    its view) and a zero in its ``round_widths`` vector — the traced
-    byte-accounting override (``comm.exchange_sparse``) that keeps each
-    graph's measured ``wire_bytes`` identical to a solo run under its own
-    *exact* plan.
+    shifts, each padded to the bucket-max (pow2-rung) buffer width; every
+    member's arrays are then re-laid onto it with ``remap_plan_arrays``
+    (sentinel rows on foreign rounds keep each lane bitwise-inert).
 
     Returns ``((shifts, widths), per-member array dicts)`` where each dict
     carries ``send_slot``/``ghost_shift``/``ghost_pos``/``shift_to_round``
     in the shared schedule plus ``round_widths`` ``(P, n_rounds)`` int32.
     """
-    P = members[0].P
     plans = [m.comm_plan for m in members]
     width_of = [dict(zip(pl.shifts, pl.widths)) for pl in plans]
-    exact_of = [dict(zip(pl.shifts, pl.exact_widths)) for pl in plans]
     shifts = tuple(sorted({k for pl in plans for k in pl.shifts}))
     widths = tuple(max(w.get(k, 0) for w in width_of) for k in shifts)
-    max_send = max(widths, default=0)
-    n_rounds = max(len(shifts), 1)
-
-    s2r = np.full((P,), -1, dtype=np.int32)
-    for r, k in enumerate(shifts):
-        s2r[k] = r
-    shift_to_round = np.broadcast_to(s2r, (P, P)).copy()
-
-    out = []
-    for m, pl, w, ex in zip(members, plans, width_of, exact_of):
-        send = np.full((P, n_rounds, max(max_send, 1)), m.sentinel, np.int32)
-        rw = np.zeros((n_rounds,), np.int32)
-        for r, k in enumerate(shifts):
-            if k in w:
-                rm = pl.shifts.index(k)
-                send[:, r, :pl.send_slot.shape[2]] = pl.send_slot[:, rm]
-                rw[r] = ex[k]
-        out.append(dict(
-            send_slot=send, ghost_shift=pl.ghost_shift, ghost_pos=pl.ghost_pos,
-            shift_to_round=shift_to_round,
-            round_widths=np.broadcast_to(rw, (P, n_rounds)).copy()))
-    return (shifts, widths), out
+    static = (shifts, widths)
+    return static, [remap_plan_arrays(m, static) for m in members]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -129,33 +129,26 @@ class PipelineConfig:
                 or (self.color is not None and self.color.scheme == SPARSE))
 
 
-def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
+def _recolor_loop_fns(arrs, key, cfg: PipelineConfig,
                       P_size: int | None = None, plan_static=None,
                       axis: str = AXIS, lane_axes: tuple = ()):
-    """K fused recoloring iterations in one ``lax.while_loop`` (per-shard).
+    """The fused recolor loop's traced pieces: ``(body, cond, lane_on)``.
 
-    Each iteration folds ``it`` into ``key``, reads its permutation kind
-    from the static schedule, and runs ``recolor_pass_spmd`` — bitwise the
-    host loop's iteration, minus the host round-trip.  Returns
-    ``(view, history (K, n_stats) int32, n_iters_run)``.
-
-    On a 2D ``batch × shard`` mesh (``lane_axes``, DESIGN.md §10) the loop
-    runs while *any* batch lane's adaptive stop holds — a recoloring
-    iteration is not idempotent, so a lane whose own stop tripped freezes
-    its entire carry (view, history, counters) while its body keeps
-    executing the mesh-uniform collective sequence for its peers.  This is
-    the shard_map form of what ``vmap`` of ``lax.while_loop`` already does
-    for same-device lanes (run-to-global-stop + select-mask), so lane
-    results stay bitwise the solo run's.
+    ``body``/``cond`` close over ``arrs``/``key`` and operate on the carry
+    built by ``recolor_carry_init``.  ``lane_on(state)`` is this lane's own
+    adaptive-stop predicate (``cond`` is its mesh-uniform reduction).
+    Factored out so the uninterrupted ``recolor_loop_spmd`` and the
+    chunked ``pipeline_step_spmd`` run the *same* body — the body freezes
+    a finished lane's carry via select-mask, so applying it past the stop
+    is a bitwise no-op, which is what makes chunked stepping equal to the
+    one-shot ``lax.while_loop``.
     """
     rcfg = cfg.recolor
     comm = AxisComm(axis, lane_axes)
     n_local_max = arrs["indptr"].shape[0] - 1
     mc = rcfg.max_colors
     K = cfg.n_iters
-    hist0 = jnp.zeros((max(K, 1), len(HISTORY_STATS)), jnp.int32)
-    if K == 0:
-        return view, hist0, jnp.int32(0)
+    assert K >= 1
     kind_ids = jnp.asarray(np.asarray(cfg.kind_ids, np.int32))
     patience = cfg.patience if cfg.patience else K + 1  # K+1 never trips
 
@@ -180,12 +173,16 @@ def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
     else:
         rank_of = permutation_rank_traced
 
+    def lane_on(state):
+        _, it, _, stall, _, _, _ = state
+        return (it <= K) & (stall < patience)
+
     def body(state):
         view, it, best, stall, hist, sizes, n_oor = state
         # this lane's own adaptive stop: when it has tripped but a batch
         # lane elsewhere on the mesh keeps the loop alive, the body still
         # executes (uniform collectives) and the carry freezes below
-        lane_on = (it <= K) & (stall < patience)
+        on = lane_on(state)
         ikey = jax.random.fold_in(key, it)           # host loop's per-it key
         kid = kind_ids[it - 1]
         n_classes = jnp.sum(sizes > 0).astype(jnp.int32)
@@ -208,18 +205,108 @@ def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
         new_state = (view, it + 1, jnp.minimum(best, nd_after),
                      jnp.where(improved, jnp.int32(0), stall + 1), hist,
                      sizes, oor_next)
-        return jax.tree.map(lambda n, o: jnp.where(lane_on, n, o),
+        return jax.tree.map(lambda n, o: jnp.where(on, n, o),
                             new_state, state)
 
     def cond(state):
-        _, it, _, stall, _, _, _ = state
-        return comm.lane_uniform((it <= K) & (stall < patience))
+        return comm.lane_uniform(lane_on(state))
 
-    sizes0, oor0 = class_sizes(view, arrs["n_local"], n_local_max, mc, comm)
-    state0 = (view, jnp.int32(1), jnp.int32(jnp.iinfo(jnp.int32).max),
-              jnp.int32(0), hist0, sizes0, oor0)
+    return body, cond, lane_on
+
+
+def recolor_carry_init(arrs, view, cfg: PipelineConfig,
+                       axis: str = AXIS, lane_axes: tuple = ()):
+    """The recolor loop's initial carry from a colored view.
+
+    Carry layout: ``(view, it, best, stall, hist, sizes, n_out_of_range)``
+    — ``it`` is 1-based (``it - 1`` iterations have run), ``hist`` the
+    device-resident ``(max(K,1), n_stats)`` history.  Feeding this carry
+    to ``pipeline_step_spmd`` in chunks replays ``recolor_loop_spmd``
+    bitwise; the serving engine holds one such carry per lane.
+    """
+    comm = AxisComm(axis, lane_axes)
+    n_local_max = arrs["indptr"].shape[0] - 1
+    K = cfg.n_iters
+    hist0 = jnp.zeros((max(K, 1), len(HISTORY_STATS)), jnp.int32)
+    sizes0, oor0 = class_sizes(view, arrs["n_local"], n_local_max,
+                               cfg.recolor.max_colors, comm)
+    return (view, jnp.int32(1), jnp.int32(jnp.iinfo(jnp.int32).max),
+            jnp.int32(0), hist0, sizes0, oor0)
+
+
+def recolor_loop_spmd(arrs, view, key, cfg: PipelineConfig,
+                      P_size: int | None = None, plan_static=None,
+                      axis: str = AXIS, lane_axes: tuple = ()):
+    """K fused recoloring iterations in one ``lax.while_loop`` (per-shard).
+
+    Each iteration folds ``it`` into ``key``, reads its permutation kind
+    from the static schedule, and runs ``recolor_pass_spmd`` — bitwise the
+    host loop's iteration, minus the host round-trip.  Returns
+    ``(view, history (K, n_stats) int32, n_iters_run)``.
+
+    On a 2D ``batch × shard`` mesh (``lane_axes``, DESIGN.md §10) the loop
+    runs while *any* batch lane's adaptive stop holds — a recoloring
+    iteration is not idempotent, so a lane whose own stop tripped freezes
+    its entire carry (view, history, counters) while its body keeps
+    executing the mesh-uniform collective sequence for its peers.  This is
+    the shard_map form of what ``vmap`` of ``lax.while_loop`` already does
+    for same-device lanes (run-to-global-stop + select-mask), so lane
+    results stay bitwise the solo run's.
+    """
+    if cfg.n_iters == 0:
+        hist0 = jnp.zeros((1, len(HISTORY_STATS)), jnp.int32)
+        return view, hist0, jnp.int32(0)
+    body, cond, _ = _recolor_loop_fns(arrs, key, cfg, P_size=P_size,
+                                      plan_static=plan_static, axis=axis,
+                                      lane_axes=lane_axes)
+    state0 = recolor_carry_init(arrs, view, cfg, axis=axis,
+                                lane_axes=lane_axes)
     view, it, _, _, hist, _, _ = jax.lax.while_loop(cond, body, state0)
     return view, hist, it - 1
+
+
+def pipeline_carry_spmd(arrs, order, color_key, cfg: PipelineConfig,
+                        P_size: int | None = None, plan_static=None,
+                        axis: str = AXIS, lane_axes: tuple = ()):
+    """Initial coloring + recolor carry for *stepped* execution (per-shard).
+
+    The front half of ``color_then_recolor``: runs ``color_spmd`` and
+    packs the result into a ``recolor_carry_init`` carry instead of
+    entering the while loop.  Returns ``(carry, color_stats)`` — advance
+    the carry with ``pipeline_step_spmd``.  This is the serving engine's
+    lane-admission program (DESIGN.md §11).
+    """
+    assert cfg.color is not None, "pipeline_carry_spmd needs cfg.color"
+    view, cstats = color_spmd(arrs, order, color_key, cfg.color,
+                              P_size=P_size, plan_static=plan_static,
+                              axis=axis, lane_axes=lane_axes)
+    carry = recolor_carry_init(arrs, view, cfg, axis=axis,
+                               lane_axes=lane_axes)
+    return carry, cstats
+
+
+def pipeline_step_spmd(arrs, carry, key, cfg: PipelineConfig, chunk: int,
+                       P_size: int | None = None, plan_static=None,
+                       axis: str = AXIS, lane_axes: tuple = ()):
+    """Advance a recolor carry by ``chunk`` fused iterations (per-shard).
+
+    Applies the while loop's *body* a fixed ``chunk`` times
+    (``lax.fori_loop`` with static bounds — uniform control flow by
+    construction) and returns ``(carry, done)``.  Because the body
+    select-freezes a lane whose adaptive stop has tripped, applications
+    past the stop are bitwise no-ops: running ``pipeline_step_spmd`` until
+    ``done`` yields exactly the carry ``recolor_loop_spmd`` would have
+    produced uninterrupted, for any chunk size.  The serving engine
+    interleaves lane admission between chunks on this guarantee.
+    """
+    assert chunk >= 1
+    if cfg.n_iters == 0:
+        return carry, jnp.bool_(True)
+    body, _, lane_on = _recolor_loop_fns(arrs, key, cfg, P_size=P_size,
+                                         plan_static=plan_static, axis=axis,
+                                         lane_axes=lane_axes)
+    carry = jax.lax.fori_loop(0, chunk, lambda _, s: body(s), carry)
+    return carry, ~lane_on(carry)
 
 
 def color_then_recolor(arrs, order, color_key, recolor_key,
@@ -633,6 +720,102 @@ def _many_sharded_program(sig, P, cfg, plan_static, mesh):
         return jax.jit(_count_traces(
             lambda a, o, k1, k2: run_sharded_many(fn, mesh, (a, o),
                                                   (k1, k2), axis=axis)))
+    return _PROGRAMS.get(sig, build)
+
+
+# ----------------------------------------------- continuous-engine programs --
+
+def engine_init_program(P: int, cfg: PipelineConfig, plan_static, arrs,
+                        mesh=None):
+    """Cached single-lane admission program for the serving engine.
+
+    ``(arrs, order, color_key) -> (carry, color_stats)`` — initial coloring
+    packed into a recolor carry (``pipeline_carry_spmd``).  ``arrs`` is the
+    lane's host- or device-side input dict, used for the cache signature;
+    the engine runs this once per admitted request and scatters the result
+    into its lane buffers, so admission never recompiles (DESIGN.md §11).
+    """
+    assert not cfg.has_auto
+    sig = _signature("engine_init", P, cfg, plan_static, arrs, extra=mesh)
+
+    def build():
+        if mesh is None:
+            fn = partial(pipeline_carry_spmd, cfg=cfg, P_size=P,
+                         plan_static=plan_static)
+            return jax.jit(_count_traces(
+                lambda a, o, ck: run_sim(fn, P, (a, o), (ck,))))
+        axis = shard_axis_of(mesh)
+        fn = partial(pipeline_carry_spmd, cfg=cfg, P_size=P,
+                     plan_static=plan_static, axis=axis)
+        return jax.jit(_count_traces(
+            lambda a, o, ck: run_sharded(fn, mesh, (a, o), (ck,),
+                                         axis=axis)))
+
+    return _PROGRAMS.get(sig, build)
+
+
+def engine_step_program(P: int, cfg: PipelineConfig, plan_static, arrs,
+                        B: int, chunk: int, mesh=None):
+    """Cached all-lanes step program for the serving engine.
+
+    ``(arrs, carry, keys) -> (carry, done)`` — every lane advances by
+    ``chunk`` fused recoloring iterations (``pipeline_step_spmd`` vmapped
+    over the B lane axis), with the carry input buffers **donated**: the
+    engine owns exactly one generation of lane state at a time.  Sim
+    layout stacks lanes on axis 0 (``(B, P, ...)``, ``done (B, P)``); on a
+    mesh the lanes ride ``run_sharded_many``'s ``(P, B, ...)`` layout
+    (``done (P, B)``) and are sharded over the batch mesh axis.  Lanes
+    whose stop has tripped (or that are empty) are frozen by the body's
+    select-mask, so a partially idle engine steps bitwise-inertly.
+    """
+    assert not cfg.has_auto
+    sig = _signature(f"engine_step{chunk}", P, cfg, plan_static, arrs,
+                     batch=B, extra=mesh)
+
+    def build():
+        if mesh is None:
+            fn = partial(pipeline_step_spmd, cfg=cfg, chunk=chunk, P_size=P,
+                         plan_static=plan_static)
+            inner = lambda a, c, k: run_sim(fn, P, (a, c), (k,))
+            return jax.jit(_count_traces(jax.vmap(inner)),
+                           donate_argnums=(1,))
+        axis = shard_axis_of(mesh)
+        baxis = batch_axis_of(mesh)
+        lane_axes = (baxis,) if baxis is not None else ()
+        fn = jax.vmap(partial(pipeline_step_spmd, cfg=cfg, chunk=chunk,
+                              P_size=P, plan_static=plan_static, axis=axis,
+                              lane_axes=lane_axes))
+        return jax.jit(_count_traces(
+            lambda a, c, k: run_sharded_many(fn, mesh, (a, c), (k,),
+                                             axis=axis)),
+            donate_argnums=(1,))
+
+    return _PROGRAMS.get(sig, build)
+
+
+def engine_put_program(P: int, cfg: PipelineConfig, plan_static, arrs,
+                       B: int, mesh=None):
+    """Cached lane-scatter program for the serving engine.
+
+    ``(bufs, vals, b) -> bufs`` — write one admitted lane's arrays/carry/
+    stats (``vals``, unstacked) into lane ``b`` of the engine's stacked
+    buffers in ONE donated dispatch.  Eagerly scattering the ~30 buffers
+    one ``.at[b].set`` at a time costs a device round-trip per buffer and
+    dominates admission latency; this program is the whole swap.  ``b``
+    is a traced operand, so every lane shares the one compiled program.
+    """
+    assert not cfg.has_auto
+    sig = _signature("engine_put", P, cfg, plan_static, arrs, batch=B,
+                     extra=mesh)
+    lane_axis = 0 if mesh is None else 1
+
+    def build():
+        def put(bufs, vals, b):
+            return jax.tree.map(
+                lambda buf, v: jax.lax.dynamic_update_index_in_dim(
+                    buf, v, b, axis=lane_axis), bufs, vals)
+        return jax.jit(_count_traces(put), donate_argnums=(0,))
+
     return _PROGRAMS.get(sig, build)
 
 

@@ -100,3 +100,19 @@ def make_coloring_mesh(n_workers: int | None = None, batch: int = 1):
 def make_local_mesh():
     """Degenerate mesh for CPU smoke tests (1 device, both axes size 1)."""
     return MeshSpec.local().build()
+
+
+def engine_lanes(mesh, lanes: int) -> int:
+    """Lane count a continuous-batching engine on ``mesh`` must allocate.
+
+    The engine's lane axis is sharded over the mesh's ``batch`` axis
+    (``run_sharded_many``), so the configured ``ServeConfig.lanes`` is
+    rounded up to a multiple of the batch axis size; ``mesh=None`` (sim
+    executor) and 1D meshes keep it as-is.
+    """
+    lanes = max(1, int(lanes))
+    if mesh is None:
+        return lanes
+    from repro.core.comm import batch_axis_size
+    b = batch_axis_size(mesh)
+    return -(-lanes // b) * b

@@ -15,7 +15,7 @@ from repro.core import (ColorConfig, PipelineConfig, RecolorConfig,
                         program_cache_clear, program_cache_contains,
                         program_cache_stats, rmat)
 from repro.core.pipeline import pipeline_sim
-from repro.launch.serve_coloring import ColoringService
+from repro.launch.serve_coloring import ColoringService, ServeConfig
 
 P = 4
 
@@ -92,7 +92,10 @@ def test_serve_two_bucket_mix_cache_smoke():
     graphs = [rmat.rmat_good(6, 8, seed=s) for s in (1, 2)] + \
              [rmat.rmat_good(7, 8, seed=s) for s in (1, 2)]
     program_cache_clear()
-    svc = ColoringService(P=P, cfg=cfg, validate=True)
+    # this test pins the *flush* scheduler's batch/solo routing; the
+    # continuous engine's trace pins live in test_serve_continuous.py
+    svc = ColoringService(P=P, cfg=cfg, validate=True,
+                          serve=ServeConfig(mode="flush"))
     ids = [svc.submit(g) for g in graphs]
     cold = svc.flush()
     assert all(cold[i]["route"] == "batch" for i in ids)

@@ -17,7 +17,8 @@ from repro.core import (ColorConfig, PipelineConfig, RecolorConfig,
                         bucket_graphs, check_coloring, color_many,
                         compute_order, ordering, pad_partition,
                         partition_graph, pipeline_sim, rmat)
-from repro.launch.serve_coloring import ColoringService, default_config
+from repro.launch.serve_coloring import (ColoringService, FakeClock,
+                                         ServeConfig, default_config)
 
 MC = 512
 
@@ -204,3 +205,35 @@ def test_coloring_service_round_trip():
     for g, i in zip(graphs, ids):
         assert res[i]["check"]["valid"]
         assert res[i]["n_colors"] == res[i]["check"]["n_colors"]
+
+
+@pytest.mark.parametrize("mode", ["flush", "continuous"])
+def test_service_stats_counters_consistent(mode):
+    """Regression (ISSUE 10 satellite): ``stats()`` always reports the
+    shed/deferral counters, ``pending`` == queued + running in every
+    state, and completions-by-route sum to the results returned."""
+    svc = ColoringService(
+        P=2, validate=True, clock=FakeClock(),
+        cfg=default_config(max_colors=MC, n_iters=2, patience=0),
+        serve=ServeConfig(mode=mode, lanes=2, max_queue=3))
+    st = svc.stats()
+    for key in ("n_shed", "n_deferred", "n_failed", "solo", "batch",
+                "lane", "queued", "running", "engines"):
+        assert key in st, key
+    assert st["queued"] == st["running"] == svc.pending == 0
+    graphs = _mix()
+    ids = [svc.submit(g) for g in graphs]
+    st = svc.stats()
+    assert st["queued"] + st["running"] == svc.pending
+    # continuous mode sheds the submit past max_queue; flush never sheds
+    n_shed = st["n_shed"]
+    assert n_shed == (len(graphs) - 3 if mode == "continuous" else 0)
+    assert svc.pending == len(graphs) - n_shed
+    res = svc.flush()
+    st = svc.stats()
+    assert svc.pending == st["queued"] == st["running"] == 0
+    assert len(res) == len(graphs) - n_shed
+    assert st["solo"] + st["batch"] + st["lane"] == len(res)
+    assert st["n_shed"] == n_shed and st["n_failed"] == 0
+    for i in ids[:len(graphs) - n_shed]:
+        assert res[i]["check"]["valid"]
